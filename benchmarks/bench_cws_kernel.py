@@ -1,0 +1,64 @@
+"""CWS hashing + min-max Gram throughput: Pallas kernel (interpret mode on
+this CPU container — the BlockSpec tiling is what ships to TPU), the
+chunked pure-JAX path, and the naive oracle. Also the regenerated-RNG
+variant (beyond-paper HBM optimization, DESIGN.md §7).
+
+Wall-times here are CPU numbers — meaningful relative to each other for
+the JAX paths; the interpret-mode Pallas time measures the interpreter,
+not TPU performance (the TPU roofline for the kernel is derived
+analytically in EXPERIMENTS.md §Roofline: the kernel is VPU/HBM-bound at
+~8 flops/byte over 3 param matrices, or ~24 flops/byte with fused RNG).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.core import cws_hash, make_cws_params
+from repro.core.cws import cws_hash_regen
+from repro.kernels import ops
+from repro.kernels.ref import cws_hash_ref, min_sum_ref
+from repro.core.kernels import minmax_gram
+
+
+def rand_nonneg(key, shape, sparsity=0.5):
+    k1, k2 = jax.random.split(key)
+    return (jnp.exp(jax.random.normal(k1, shape)) *
+            jax.random.bernoulli(k2, 1 - sparsity, shape))
+
+
+def run(fast: bool = False):
+    n, d, k = (256, 256, 256) if fast else (1024, 512, 512)
+    x = rand_nonneg(jax.random.PRNGKey(0), (n, d))
+    params = make_cws_params(jax.random.PRNGKey(1), d, k)
+
+    flops = n * d * k * 8  # ~8 VPU ops per (row, dim, hash)
+
+    _, us = timed(lambda: cws_hash(x, params, row_block=256, hash_block=128),
+                  repeats=3)
+    emit("cws/chunked_jax", us, f"{flops/us/1e3:.2f} GFLOP/s_cpu")
+
+    _, us = timed(lambda: cws_hash_regen(x, jax.random.PRNGKey(2), k,
+                                         hash_block=128), repeats=3)
+    emit("cws/regen_rng", us, f"{flops/us/1e3:.2f} GFLOP/s_cpu "
+         f"(0 bytes of stored r/c/beta)")
+
+    small = (64, 128, 64)
+    xs = rand_nonneg(jax.random.PRNGKey(3), small[:2])
+    ps = make_cws_params(jax.random.PRNGKey(4), small[1], small[2])
+    _, us = timed(lambda: ops.cws_hash(xs, ps, bn=64, bk=64, bd=64,
+                                       interpret=True), repeats=1)
+    emit("cws/pallas_interpret(64x128x64)", us, "correctness-path only")
+
+    # min-max Gram: pallas-tiling ref vs pure-jnp oracle
+    m = 256 if fast else 512
+    y = rand_nonneg(jax.random.PRNGKey(5), (m, d))
+    gflops = 2 * m * n * d
+    _, us = timed(lambda: minmax_gram(x, y, block=128), repeats=3)
+    emit("minmax_gram/chunked_jax", us, f"{gflops/us/1e3:.2f} GFLOP/s_cpu")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing: timing + CSV emission + result storage."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    import jax
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, obj) -> None:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(obj, indent=1))

@@ -1,0 +1,100 @@
+"""Figures 4-5: bias and MSE of min-max estimation by full / 0-bit / 1-bit
+CWS vs k, against the binomial reference K(1-K)/k.
+
+The paper's central empirical claim (Eq. 8): discarding t* loses nothing —
+0-bit MSE sits on the theoretical variance curve and bias is << 1e-4 in
+the stabilized zone. Monte-Carlo here: `reps` independent hash sets per
+(pair, k) on synthetic Zipfian word pairs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import (cws_hash, make_cws_params, minmax_pair, encode,
+                        collision_estimate, full_collision_estimate)
+from repro.data.synthetic import word_pair
+
+KS = (1, 4, 16, 64, 256, 1024)
+
+
+def run(fast: bool = False, pairs=("HONG-KONG", "CREDIT-CARD",
+                                   "SAN-FRANCISCO", "PIPELINE-FLUSH"),
+        reps: int = 2000, n_docs: int = 2 ** 16):
+    if fast:
+        pairs = pairs[:2]
+        reps = 300
+        n_docs = 4096
+    out = {}
+    for pair in pairs:
+        u, v = word_pair(pair, n_docs=n_docs)
+        # support compaction: coordinates where both are zero can never win
+        # the argmin and the (r, c, beta) rows are iid per coordinate, so
+        # restricting to the union support is statistically EXACT — and
+        # turns the paper's 65536-dim sparse vectors into dense ~f1+f2 ones.
+        support = np.flatnonzero((u > 0) | (v > 0))
+        if len(support) > 2000:   # cap MC cost; K_true is re-measured below
+            support = np.random.default_rng(0).choice(support, 2000,
+                                                      replace=False)
+        u, v = u[support], v[support]
+        x = jnp.stack([jnp.asarray(u), jnp.asarray(v)])
+        k_true = float(minmax_pair(x[0], x[1]))
+        kmax = max(KS)
+        # adaptive budget: MSE-of-MSE ~ sqrt(2/reps)
+        pair_reps = max(200, min(reps, int(reps * 1000 / max(len(u), 1))))
+        t0 = time.perf_counter()
+
+        # one big batch of reps*kmax independent hashes
+        @jax.jit
+        def hashes(key):
+            params = make_cws_params(key, x.shape[1], kmax)
+            i_s, t_s = cws_hash(x, params, row_block=2, hash_block=256)
+            return i_s, t_s
+
+        keys = jax.random.split(jax.random.PRNGKey(0), pair_reps)
+        i_all, t_all = jax.lax.map(hashes, keys)   # (reps, 2, kmax)
+        i_all = np.asarray(i_all)
+        t_all = np.asarray(t_all)
+        us = (time.perf_counter() - t0) * 1e6
+
+        row = {"K": k_true, "ks": {}}
+        for k in KS:
+            iu, iv = i_all[:, 0, :k], i_all[:, 1, :k]
+            tu, tv = t_all[:, 0, :k], t_all[:, 1, :k]
+            est_full = ((iu == iv) & (tu == tv)).mean(axis=1)
+            est_0bit = (iu == iv).mean(axis=1)
+            est_1bit = ((iu == iv) & ((tu & 1) == (tv & 1))).mean(axis=1)
+            theo = k_true * (1 - k_true) / k
+            row["ks"][k] = {
+                "bias_full": float(est_full.mean() - k_true),
+                "bias_0bit": float(est_0bit.mean() - k_true),
+                "bias_1bit": float(est_1bit.mean() - k_true),
+                "mse_full": float(((est_full - k_true) ** 2).mean()),
+                "mse_0bit": float(((est_0bit - k_true) ** 2).mean()),
+                "mse_1bit": float(((est_1bit - k_true) ** 2).mean()),
+                "theory": theo,
+            }
+        out[pair] = row
+        big_k = row["ks"][max(KS)]
+        emit(f"fig45/{pair}", us,
+             f"K={k_true:.4f} mse0bit@{max(KS)}={big_k['mse_0bit']:.2e} "
+             f"theory={big_k['theory']:.2e} bias0bit={big_k['bias_0bit']:+.1e}")
+    save_json("fig45_cws_mse", out)
+
+    # paper claims: (a) 0-bit MSE tracks theory within MC noise;
+    # (b) full-scheme bias ~ 0; (c) 0-bit bias small (<~1e-2 here, <<1e-4
+    # at the paper's 10k reps and larger D).
+    for pair, row in out.items():
+        for k in (64, 256, 1024):
+            d = row["ks"][k]
+            assert d["mse_0bit"] < 3.0 * d["theory"] + 1e-6, (pair, k, d)
+            assert abs(d["bias_0bit"]) < 0.03, (pair, k, d)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Figure 6: keeping ALL of t* and only 0/1/2/4 bits of i* does NOT
+estimate the min-max kernel — i* carries the information, t* doesn't.
+(The sanity check that motivates discarding t* rather than i*.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import cws_hash, make_cws_params, minmax_pair
+from repro.core.hashing import encode_tstar_only
+from repro.data.synthetic import word_pair
+
+
+def run(fast: bool = False, pair: str = "CREDIT-CARD", reps: int = 500,
+        k: int = 256, n_docs: int = 4096):
+    if fast:
+        reps = 100
+    u, v = word_pair(pair, n_docs=n_docs)
+    x = jnp.stack([jnp.asarray(u), jnp.asarray(v)])
+    k_true = float(minmax_pair(x[0], x[1]))
+
+    @jax.jit
+    def hashes(key):
+        params = make_cws_params(key, x.shape[1], k)
+        return cws_hash(x, params, row_block=2, hash_block=256)
+
+    t0 = time.perf_counter()
+    keys = jax.random.split(jax.random.PRNGKey(1), reps)
+    i_all, t_all = jax.lax.map(hashes, keys)
+    i_all, t_all = np.asarray(i_all), np.asarray(t_all)
+    us = (time.perf_counter() - t0) * 1e6
+
+    out = {"K": k_true, "bias_by_bi": {}}
+    for b_i in (0, 1, 2, 4):
+        cu = np.asarray(encode_tstar_only(jnp.asarray(i_all[:, 0]),
+                                          jnp.asarray(t_all[:, 0]), b_i=b_i))
+        cv = np.asarray(encode_tstar_only(jnp.asarray(i_all[:, 1]),
+                                          jnp.asarray(t_all[:, 1]), b_i=b_i))
+        est = (cu == cv).mean(axis=1)
+        out["bias_by_bi"][b_i] = float(est.mean() - k_true)
+    save_json("fig6_tstar_only", out)
+    emit(f"fig6/{pair}", us,
+         " ".join(f"bias(b_i={b})={v:+.3f}"
+                  for b, v in out["bias_by_bi"].items()))
+    # t*-only (b_i=0) must be badly biased; adding i* bits must shrink it
+    assert abs(out["bias_by_bi"][0]) > 5 * abs(out["bias_by_bi"][4])
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md (§Dry-run tables,
+§Roofline tables) from benchmarks/results/. Hand-written sections
+(§Paper-validation, §Perf) live in EXPERIMENTS.md between markers and are
+preserved.
+
+  PYTHONPATH=src:. python benchmarks/gen_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import roofline
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "benchmarks" / "results" / "dryrun"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for f in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        r = json.loads(f.read_text())
+        rows.append(r)
+    lines = [
+        "| arch / shape | step | devs | peak GiB/dev | HLO GFLOP/dev | "
+        "collective GB/dev | top collectives | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        nc = r["hlo"]["n_collectives"]
+        top = ", ".join(f"{k}:{v}" for k, v in
+                        sorted(nc.items(), key=lambda kv: -kv[1])[:3]
+                        if v > 0) or "-"
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {r['kind']} | {r['n_devices']} "
+            f"| {r['memory']['peak_est_bytes']/2**30:.2f} "
+            f"| {r['hlo']['dot_flops_per_device']/1e9:,.0f} "
+            f"| {r['hlo']['collective_total_bytes']/1e9:.2f} "
+            f"| {top} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def main():
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text() if exp.exists() else ""
+    begin, end = "<!-- AUTOGEN BEGIN -->", "<!-- AUTOGEN END -->"
+    auto = [begin, ""]
+    auto.append("## §Dry-run — single pod (16x16 = 256 chips)\n")
+    auto.append(dryrun_table("16x16"))
+    auto.append("\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    auto.append(dryrun_table("2x16x16"))
+    auto.append("\n## §Roofline — single pod (TPU v5e model: 197 TF/s bf16,"
+                " 819 GB/s HBM, 50 GB/s/link)\n")
+    auto.append(roofline.markdown_table("16x16"))
+    auto.append("\n## §Roofline — multi-pod\n")
+    auto.append(roofline.markdown_table("2x16x16"))
+    auto.append("")
+    auto.append(end)
+    block = "\n".join(auto)
+    if begin in text and end in text:
+        pre = text.split(begin)[0]
+        post = text.split(end)[1]
+        text = pre + block + post
+    else:
+        text = text + "\n" + block + "\n"
+    exp.write_text(text)
+    print(f"wrote {exp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Train an LM from the assigned-architecture pool with the full
+production stack: FSDP x TP sharding rules, gradient accumulation, async
+checkpointing, watchdog, restart-on-failure.
+
+Default is a reduced config sized for this single-core CPU container; on
+TPU pass --variant full --production-mesh (the same code lowers the
+16x16 / 2x16x16 meshes — see repro.launch.dryrun for the proof).
+
+    PYTHONPATH=src python examples/train_lm.py --arch starcoder2_7b \
+        --steps 100 --ckpt-dir /tmp/ckpt
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv.insert(1, "--variant") if "--variant" not in sys.argv else None
+    if "--variant" == sys.argv[1]:
+        sys.argv.insert(2, "smoke")
+    main()

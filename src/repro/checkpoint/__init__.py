@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (
+    Checkpointer, save_checkpoint, restore_checkpoint, latest_step,
+)
+
+__all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

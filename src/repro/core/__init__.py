@@ -1,0 +1,21 @@
+"""The paper's contribution: min-max kernels + (0-bit) CWS hashing + learners."""
+from repro.core import kernels, cws, hashing, kernel_svm, linear_model
+from repro.core.kernels import (
+    minmax_gram, nminmax_gram, intersection_gram, linear_gram,
+    resemblance_gram, minmax_pair, resemblance_pair, GRAM_FNS,
+)
+from repro.core.cws import CWSParams, make_cws_params, cws_hash, cws_hash_reference
+from repro.core.hashing import (
+    encode, encode_tstar_only, collision_estimate, full_collision_estimate,
+    feature_indices, one_hot_features, hashed_dim,
+)
+
+__all__ = [
+    "kernels", "cws", "hashing", "kernel_svm", "linear_model",
+    "minmax_gram", "nminmax_gram", "intersection_gram", "linear_gram",
+    "resemblance_gram", "minmax_pair", "resemblance_pair", "GRAM_FNS",
+    "CWSParams", "make_cws_params", "cws_hash", "cws_hash_reference",
+    "encode", "encode_tstar_only", "collision_estimate",
+    "full_collision_estimate", "feature_indices", "one_hot_features",
+    "hashed_dim",
+]

@@ -1,0 +1,89 @@
+"""Encodings of CWS samples (i*, t*) and collision-rate estimators.
+
+The paper's schemes:
+  * "full"   — keep all bits of (i*, t*): collision prob = K_MM exactly.
+  * "0-bit"  — discard t*, keep i* (the paper's proposal, Eq. 8).
+  * "b_i-bit"— keep only the lowest b_i bits of i* (needed so the expanded
+               feature space 2^{b_i} x k stays small for linear learning).
+  * "b_t-bit"— additionally keep the lowest b_t bits of t* (Fig. 8 studies
+               b_t = 2; parity of t* is the "1-bit" scheme of Figs. 4-5).
+
+For linear learning, hash j with code z contributes one-hot index
+``j * 2^{b_i + b_t} + z`` — exactly k ones per example, which makes the
+linear model an embedding-bag (see core/linear_model.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def encode(i_star: Array, t_star: Array, *, b_i: int = 0, b_t: int = 0) -> Array:
+    """Compact per-hash codes. b_i/b_t == 0 means keep ALL bits of i*/none of t*.
+
+    Conventions (match the paper):
+      b_i = 0 -> keep i* in full ("0-bit scheme" refers to t*, not i*).
+      b_t = 0 -> discard t* entirely.
+    """
+    i_part = i_star if b_i == 0 else jnp.bitwise_and(i_star, (1 << b_i) - 1)
+    i_part = jnp.where(i_star < 0, -1, i_part)  # all-zero rows stay sentinel
+    if b_t == 0:
+        return i_part.astype(jnp.int32)
+    t_part = jnp.bitwise_and(t_star, (1 << b_t) - 1)
+    code = i_part * (1 << b_t) + t_part
+    return jnp.where(i_star < 0, -1, code).astype(jnp.int32)
+
+
+def encode_tstar_only(i_star: Array, t_star: Array, *, b_i: int) -> Array:
+    """Fig. 6 variant: keep ALL of t* and only b_i bits of i* (b_i may be 0).
+
+    Combined as an int32 hash with wraparound (deterministic in XLA), so
+    equality semantics are preserved; accidental wrap collisions are
+    ~2^-32 and irrelevant at Monte-Carlo scale."""
+    if b_i == 0:
+        code = t_star
+    else:
+        i_part = jnp.bitwise_and(i_star, (1 << b_i) - 1)
+        code = t_star * jnp.int32(1 << b_i) + i_part
+    return jnp.where(i_star < 0, jnp.int32(-(2 ** 30) - 12345), code)
+
+
+@jax.jit
+def collision_estimate(codes_u: Array, codes_v: Array) -> Array:
+    """K_hat = (1/k) sum_j 1[code_u_j == code_v_j]; works batched on (..., k)."""
+    return jnp.mean((codes_u == codes_v).astype(jnp.float32), axis=-1)
+
+
+def full_collision_estimate(i_u, t_u, i_v, t_v) -> Array:
+    eq = (i_u == i_v) & (t_u == t_v)
+    return jnp.mean(eq.astype(jnp.float32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("b_i", "b_t"))
+def feature_indices(codes: Array, *, b_i: int, b_t: int = 0) -> Array:
+    """Expanded one-hot indices (n, k) into a k * 2^{b_i+b_t} feature space.
+
+    codes must come from ``encode`` with the same (b_i, b_t); b_i >= 1 here
+    (the full-i* space is unbounded-ish; linear learning always buckets).
+    Sentinel codes (-1, all-zero rows) map to bucket 0 of their hash.
+    """
+    width = 1 << (b_i + b_t)
+    k = codes.shape[-1]
+    offs = jnp.arange(k, dtype=jnp.int32) * width
+    safe = jnp.where(codes < 0, 0, codes)
+    return (offs + safe).astype(jnp.int32)
+
+
+def one_hot_features(codes: Array, *, b_i: int, b_t: int = 0) -> Array:
+    """Dense 0/1 matrix (n, k * 2^{b_i+b_t}). For small problems/tests only."""
+    idx = feature_indices(codes, b_i=b_i, b_t=b_t)
+    dim = codes.shape[-1] * (1 << (b_i + b_t))
+    return jax.nn.one_hot(idx, dim, dtype=jnp.float32).sum(axis=-2)
+
+
+def hashed_dim(k: int, b_i: int, b_t: int = 0) -> int:
+    return k * (1 << (b_i + b_t))

@@ -1,0 +1,107 @@
+"""The four kernels of the paper (Eqs. 1-5) as chunked pure-JAX Grams.
+
+For nonnegative u, v:
+    min-max       K_MM  = sum_i min(u_i,v_i) / sum_i max(u_i,v_i)      (1)
+    resemblance   K_R   = |u>0 & v>0| / |u>0 | v>0|                    (2)
+    intersection  K_I   = sum_i min(u_i,v_i),  with sum-to-one inputs  (3)
+    n-min-max     K_NMM = K_MM on sum-to-one inputs                    (4)
+    linear        K_rho = <u,v>, with unit-L2 inputs                   (5)
+
+Implementation note: for nonnegative data ``max(u,v) = u + v - min(u,v)``,
+so one O(n*m*D) min-sum pass + O(n+m) row sums yields the min-max Gram —
+half the naive FLOPs.  The same identity drives the Pallas Gram kernel
+(kernels/minmax_gram.py); this module is its oracle and the small-scale
+path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _check_nonneg(x):
+    return jnp.maximum(x, 0.0)  # kernels are only defined on nonneg data
+
+
+def sum_to_one(x: jax.Array, axis: int = -1) -> jax.Array:
+    x = _check_nonneg(x)
+    s = jnp.sum(x, axis=axis, keepdims=True)
+    return x / jnp.maximum(s, 1e-30)
+
+
+def unit_l2(x: jax.Array, axis: int = -1) -> jax.Array:
+    n = jnp.sqrt(jnp.sum(jnp.square(x), axis=axis, keepdims=True))
+    return x / jnp.maximum(n, 1e-30)
+
+
+def _min_sum_block(xb: jax.Array, y: jax.Array) -> jax.Array:
+    # xb: (bm, D), y: (n, D) -> (bm, n) of sum_i min(x_i, y_i)
+    return jnp.sum(jnp.minimum(xb[:, None, :], y[None, :, :]), axis=-1)
+
+
+def _chunked_pairwise(fn, x: jax.Array, y: jax.Array, block: int) -> jax.Array:
+    m = x.shape[0]
+    pad = (-m) % block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    blocks = xp.reshape(-1, block, x.shape[1])
+    out = jax.lax.map(lambda xb: fn(xb, y), blocks)
+    return out.reshape(-1, y.shape[0])[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minmax_gram(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    """K_MM Gram matrix (m, n) between rows of x (m, D) and y (n, D)."""
+    x = _check_nonneg(x.astype(jnp.float32))
+    y = _check_nonneg(y.astype(jnp.float32))
+    sx = jnp.sum(x, axis=-1)
+    sy = jnp.sum(y, axis=-1)
+    mins = _chunked_pairwise(_min_sum_block, x, y, block)
+    maxs = sx[:, None] + sy[None, :] - mins
+    return mins / jnp.maximum(maxs, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def nminmax_gram(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    return minmax_gram(sum_to_one(x), sum_to_one(y), block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def intersection_gram(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    x = sum_to_one(x)
+    y = sum_to_one(y)
+    return _chunked_pairwise(_min_sum_block, x, y, block)
+
+
+@jax.jit
+def linear_gram(x: jax.Array, y: jax.Array) -> jax.Array:
+    return unit_l2(x.astype(jnp.float32)) @ unit_l2(y.astype(jnp.float32)).T
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def resemblance_gram(x: jax.Array, y: jax.Array, *, block: int = 128) -> jax.Array:
+    return minmax_gram((x > 0).astype(jnp.float32), (y > 0).astype(jnp.float32),
+                       block=block)
+
+
+def minmax_pair(u: jax.Array, v: jax.Array) -> jax.Array:
+    """K_MM for a single pair of vectors (used by the word-pair study)."""
+    u = _check_nonneg(u.astype(jnp.float32))
+    v = _check_nonneg(v.astype(jnp.float32))
+    mins = jnp.sum(jnp.minimum(u, v))
+    maxs = jnp.sum(jnp.maximum(u, v))
+    return mins / jnp.maximum(maxs, 1e-30)
+
+
+def resemblance_pair(u: jax.Array, v: jax.Array) -> jax.Array:
+    return minmax_pair((u > 0).astype(jnp.float32), (v > 0).astype(jnp.float32))
+
+
+GRAM_FNS = {
+    "linear": linear_gram,
+    "min-max": minmax_gram,
+    "n-min-max": nminmax_gram,
+    "intersection": intersection_gram,
+    "resemblance": resemblance_gram,
+}

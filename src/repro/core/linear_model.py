@@ -1,0 +1,144 @@
+"""Linear classifiers for (a) dense features and (b) CWS-hashed features.
+
+The hashed dataset (k hashes, each a one-hot over 2^{b_i+b_t} buckets) is an
+embedding-bag: logits_c = sum_j W_c[j, code_j] + b_c.  We therefore store
+W as (n_classes, k, width) and train with gathers — never materializing the
+one-hot matrix.  This is the exact structure of a vocab-sharded embedding
+table, so at scale W shards over the `model` mesh axis (width dim) and the
+batch over `data`, reusing the LM sharding rules.
+
+Losses: multiclass squared hinge (one-vs-rest, matching the paper's
+LIBLINEAR L2-loss setting) or softmax cross-entropy.  l2 reg corresponds to
+1/(2C) * ||W||^2, so C sweeps map to the paper's C grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+
+Array = jax.Array
+
+
+class LinearParams(NamedTuple):
+    w: Array  # dense: (D, C); hashed: (k, width, C)
+    b: Array  # (C,)
+
+
+def init_dense(key: Array, dim: int, n_classes: int) -> LinearParams:
+    return LinearParams(jnp.zeros((dim, n_classes), jnp.float32),
+                        jnp.zeros((n_classes,), jnp.float32))
+
+
+def init_hashed(key: Array, k: int, width: int, n_classes: int) -> LinearParams:
+    return LinearParams(jnp.zeros((k, width, n_classes), jnp.float32),
+                        jnp.zeros((n_classes,), jnp.float32))
+
+
+def dense_logits(params: LinearParams, x: Array) -> Array:
+    return x @ params.w + params.b
+
+
+def hashed_logits(params: LinearParams, codes: Array) -> Array:
+    """codes: (n, k) int32 bucket ids in [0, width). Embedding-bag gather."""
+    # (n, k, C) <- W[j, codes[:, j], :]
+    gathered = jnp.take_along_axis(
+        params.w[None],                      # (1, k, width, C)
+        codes[:, :, None, None].astype(jnp.int32).clip(0),  # (n, k, 1, 1)
+        axis=2,
+    )[:, :, 0, :]
+    return gathered.sum(axis=1) + params.b
+
+
+def squared_hinge_loss(logits: Array, labels: Array, n_classes: int) -> Array:
+    y = jnp.where(jax.nn.one_hot(labels, n_classes, dtype=jnp.float32) > 0,
+                  1.0, -1.0)
+    margins = jnp.maximum(0.0, 1.0 - y * logits)
+    return jnp.mean(jnp.sum(jnp.square(margins), axis=-1))
+
+
+def softmax_xent_loss(logits: Array, labels: Array, n_classes: int) -> Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    n_classes: int
+    steps: int = 400
+    lr: float = 0.05
+    l2: float = 1e-4          # = 1/(2C) scaled by n
+    batch_size: int = 0       # 0 => full batch
+    loss: str = "squared_hinge"
+
+
+def _loss_fn(params, xb, yb, cfg: TrainCfg, logits_fn):
+    logits = logits_fn(params, xb)
+    if cfg.loss == "squared_hinge":
+        data = squared_hinge_loss(logits, yb, cfg.n_classes)
+    else:
+        data = softmax_xent_loss(logits, yb, cfg.n_classes)
+    reg = cfg.l2 * jnp.sum(jnp.square(params.w))
+    return data + reg
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "kind"))
+def fit_linear(params: LinearParams, x: Array, labels: Array, *,
+               cfg: TrainCfg, kind: str = "dense") -> LinearParams:
+    """Full-batch Adam (deterministic, good up to ~100k examples on CPU)."""
+    logits_fn = dense_logits if kind == "dense" else hashed_logits
+    tx = optim.chain(optim.clip_by_global_norm(10.0),
+                     optim.adamw(optim.cosine_schedule(cfg.lr, cfg.steps)))
+    state = tx.init(params)
+
+    def step(i, carry):
+        params, state = carry
+        grads = jax.grad(_loss_fn)(params, x, labels, cfg, logits_fn)
+        updates, state = tx.update(grads, state, params, i)
+        return optim.apply_updates(params, updates), state
+
+    params, _ = jax.lax.fori_loop(0, cfg.steps, step, (params, state))
+    return params
+
+
+def linear_accuracy(params: LinearParams, x: Array, labels: Array,
+                    kind: str = "dense") -> float:
+    logits_fn = dense_logits if kind == "dense" else hashed_logits
+    pred = jnp.argmax(logits_fn(params, x), axis=-1)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+def best_linear_accuracy_over_C(x_tr, y_tr, x_te, y_te, *, n_classes,
+                                kind="dense",
+                                l2s=(1e-6, 1e-5, 1e-4, 1e-3),
+                                steps=400, lr=0.05):
+    """Mirror of the paper's C sweep for the linear learner."""
+    best = 0.0
+    for l2 in l2s:
+        cfg = TrainCfg(n_classes=n_classes, steps=steps, lr=lr, l2=float(l2))
+        if kind == "dense":
+            p0 = init_dense(jax.random.PRNGKey(0), x_tr.shape[-1], n_classes)
+        else:
+            k, width = x_tr.shape[-1], None
+            raise ValueError("use fit_hashed_over_C for hashed features")
+        p = fit_linear(p0, x_tr, y_tr, cfg=cfg, kind=kind)
+        best = max(best, linear_accuracy(p, x_te, y_te, kind=kind))
+    return best
+
+
+def best_hashed_accuracy_over_C(codes_tr, y_tr, codes_te, y_te, *, n_classes,
+                                k: int, width: int,
+                                l2s=(1e-6, 1e-5, 1e-4),
+                                steps=400, lr=0.05):
+    best = 0.0
+    for l2 in l2s:
+        cfg = TrainCfg(n_classes=n_classes, steps=steps, lr=lr, l2=float(l2))
+        p0 = init_hashed(jax.random.PRNGKey(0), k, width, n_classes)
+        p = fit_linear(p0, codes_tr, y_tr, cfg=cfg, kind="hashed")
+        best = max(best, linear_accuracy(p, codes_te, y_te, kind="hashed"))
+    return best

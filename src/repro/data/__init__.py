@@ -1,0 +1,3 @@
+from repro.data import synthetic, loader
+
+__all__ = ["synthetic", "loader"]

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for 0-bit/full CWS hashing.
+
+Computes, for every (row, hash) pair, the argmin over dimensions of
+
+    log a_i = log c_i - r_i (floor(log u_i / r_i + beta_i) - beta_i + 1)
+
+TPU adaptation (vs the paper's per-vector CPU loop):
+  * grid (rows/BN, hashes/BK, D/BD) with the D axis innermost — a running
+    (best log_a, best index, best t) accumulator lives in VMEM scratch and
+    is written to HBM once per (row, hash) tile at the last D step;
+  * inside a grid step we loop over the BD dimensions with a fori_loop,
+    each iteration doing rank-2 (BN x BK) VPU math (broadcast of the
+    column log u against the parameter row) — no rank-3 temporaries, so
+    VMEM stays at ~6 tiles regardless of BD;
+  * the kernel is VPU-bound (log/floor/mul on 8x128 lanes) and
+    HBM-traffic-dominated by the 3 parameter matrices; the ops.py wrapper
+    therefore reuses one parameter fetch across the whole row-block
+    (params are indexed by (d, k) only — Pallas keeps the tile resident
+    while the row index varies fastest ... see ops.cws_hash for the grid
+    order rationale).
+
+Zero entries (log u = -inf) never win the argmin; all-zero rows return the
+sentinel i* = -1 (matching repro.core.cws semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_SENTINEL = -1
+
+
+def _cws_kernel(x_ref, r_ref, logc_ref, beta_ref, istar_ref, tstar_ref,
+                best_a, best_i, best_t, *, bd: int, n_d_steps: int):
+    d_step = pl.program_id(2)
+
+    @pl.when(d_step == 0)
+    def _init():
+        best_a[...] = jnp.full_like(best_a[...], jnp.inf)
+        best_i[...] = jnp.full_like(best_i[...], NEG_SENTINEL)
+        best_t[...] = jnp.zeros_like(best_t[...])
+
+    x = x_ref[...]            # (BN, BD)
+    logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+
+    def body(d, carry):
+        a, i, t = carry
+        lu = logu[:, d][:, None]                   # (BN, 1)
+        r = r_ref[d, :][None, :]                   # (1, BK)
+        lc = logc_ref[d, :][None, :]
+        be = beta_ref[d, :][None, :]
+        tt = jnp.floor(lu / r + be)                # (BN, BK)
+        la = lc - r * (tt - be + 1.0)
+        la = jnp.where(jnp.isfinite(lu), la, jnp.inf)
+        upd = la < a
+        d_global = (d_step * bd + d).astype(jnp.int32)
+        a = jnp.where(upd, la, a)
+        i = jnp.where(upd, d_global, i)
+        t = jnp.where(upd, tt, t)
+        return a, i, t
+
+    a0, i0, t0 = best_a[...], best_i[...], best_t[...]
+    a1, i1, t1 = jax.lax.fori_loop(0, bd, body, (a0, i0, t0))
+    best_a[...] = a1
+    best_i[...] = i1
+    best_t[...] = t1
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _emit():
+        istar_ref[...] = best_i[...]
+        tstar_ref[...] = jnp.clip(best_t[...], -2 ** 30, 2 ** 30).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "bd", "interpret"))
+def cws_hash_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
+                    beta: jax.Array, *, bn: int = 128, bk: int = 128,
+                    bd: int = 256, interpret: bool = False):
+    """x: (n, D) nonneg fp32; params (D, k) fp32 -> (i*, t*) each (n, k) i32."""
+    n, d = x.shape
+    k = r.shape[1]
+    bn = min(bn, n)
+    bk = min(bk, k)
+    bd = min(bd, d)
+    pad_n, pad_d, pad_k = (-n) % bn, (-d) % bd, (-k) % bk
+    # zero-padded x columns are masked by construction (log 0 = -inf);
+    # padded params are never selected for real columns, r=1 avoids div-0.
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    rp = jnp.pad(r, ((0, pad_d), (0, pad_k)), constant_values=1.0)
+    lcp = jnp.pad(log_c, ((0, pad_d), (0, pad_k)))
+    bep = jnp.pad(beta, ((0, pad_d), (0, pad_k)))
+    np_, dp_, kp_ = xp.shape[0], xp.shape[1], rp.shape[1]
+    n_d_steps = dp_ // bd
+
+    grid = (np_ // bn, kp_ // bk, n_d_steps)
+    kernel = functools.partial(_cws_kernel, bd=bd, n_d_steps=n_d_steps)
+    out_shape = [jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
+                 jax.ShapeDtypeStruct((np_, kp_), jnp.int32)]
+    i_star, t_star = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j, s: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j, s: (i, j)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bn, bk), jnp.float32),   # best log_a
+            pltpu.VMEM((bn, bk), jnp.int32),     # best index
+            pltpu.VMEM((bn, bk), jnp.float32),   # best t (cast on emit)
+        ],
+        interpret=interpret,
+    )(xp, rp, lcp, bep)
+    return i_star[:n, :k], t_star[:n, :k]

@@ -1,0 +1,158 @@
+"""Pallas TPU flash attention (causal + sliding window, GQA-native).
+
+Scores/probs live in VMEM scratch and never round-trip HBM — the fix for
+the dominant memory-roofline term of every *_prefill cell (pure-JAX
+chunked attention materializes each (q, kv) score block to HBM between
+the two dots; measured 175.8s of HBM time vs 4.4s of compute on
+musicgen/prefill_32k — EXPERIMENTS.md §Perf).
+
+Layout: grid (batch, flat_head, q_blocks, kv_blocks), kv innermost.
+GQA without repeating K/V: the k/v BlockSpec index_map sends flat head h
+to kv head h // (H // G). Running (m, l, acc) accumulators persist in
+VMEM scratch across the kv steps (same pattern as cws_hash.py);
+the out-of-range kv blocks of the causal/window mask are skipped with
+@pl.when (zero FLOPs, zero bytes).
+
+Training uses ``flash_attention`` (custom_vjp): forward = this kernel,
+backward = recompute via the pure-JAX chunked path (flash semantics: no
+probs are saved). On this CPU container the kernel runs in interpret
+mode; on TPU it lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, window: int, blk_q: int, blk_k: int,
+                  n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    q_off = qi * blk_q
+    k_off = ki * blk_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc[...], NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc[...])
+        acc_sc[...] = jnp.zeros_like(acc_sc[...])
+
+    # causal/window block skip (static grid, dynamic predicate)
+    needed = k_off <= q_off + blk_q - 1
+    if window > 0:
+        needed = jnp.logical_and(needed,
+                                 k_off + blk_k - 1 > q_off - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)      # (blk_q, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (blk_k, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        iq = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) + q_off
+        ik = jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1) + k_off
+        mask = ik <= iq
+        if window > 0:
+            mask = jnp.logical_and(mask, ik > iq - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = corr * l_sc[...] + p.sum(axis=1, keepdims=True)
+        acc_sc[...] = corr * acc_sc[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        o_ref[0, :, 0, :] = (acc_sc[...] /
+                             jnp.maximum(l_sc[...], 1e-30)
+                             ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "blk_q", "blk_k",
+                                             "interpret"))
+def flash_attention_fwd(q, k, v, *, window: int = 0, blk_q: int = 256,
+                        blk_k: int = 256, interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, S, G, D) with H % G == 0 -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    r = h // g
+    blk_q = min(blk_q, s)
+    blk_k = min(blk_k, s)
+    pad_q = (-s) % blk_q
+    pad_k = (-s) % blk_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq, sk = qp.shape[1], kp.shape[1]
+    n_q, n_kv = sq // blk_q, sk // blk_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=d ** -0.5, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_kv=n_kv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, blk_k, 1, d),
+                         lambda bi, hi, qi, ki, r=r: (bi, ki, hi // r, 0)),
+            pl.BlockSpec((1, blk_k, 1, d),
+                         lambda bi, hi, qi, ki, r=r: (bi, ki, hi // r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, 1, d),
+                               lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((blk_q, 1), jnp.float32),   # running denom
+            pltpu.VMEM((blk_q, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :s]
+
+
+def _ref_bwd_fn(q, k, v, window, chunk):
+    """Pure-JAX flash-equivalent used for the recompute backward."""
+    from repro.models.attention import _chunked_grouped
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    q5 = q.reshape(b, s, g, h // g, d)
+    out = _chunked_grouped(q5, k, v, window=window, chunk=chunk)
+    return out.reshape(b, s, h, d)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, window: int = 0, block: int = 256,
+                    interpret: bool = False):
+    return flash_attention_fwd(q, k, v, window=window, blk_q=block,
+                               blk_k=block, interpret=interpret)
+
+
+def _fa_fwd(q, k, v, window, block, interpret):
+    out = flash_attention_fwd(q, k, v, window=window, blk_q=block,
+                              blk_k=block, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _fa_bwd(window, block, interpret, res, g_out):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_bwd_fn(q_, k_, v_, window,
+                                                    block), q, k, v)
+    return vjp(g_out)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

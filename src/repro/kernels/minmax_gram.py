@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for the min-sum Gram tile: S[m,n] = sum_d min(x[m,d], y[n,d]).
+
+With nonnegative data the full min-max Gram follows from row sums:
+    K_MM = S / (rowsum(x)[:,None] + rowsum(y)[None,:] - S)
+so the kernel only accumulates S (half the naive FLOPs — the max-side sum
+is algebraically free). Matmul-shaped tiling: grid (M/BM, N/BN, D/BD) with
+D innermost and an (BM, BN) fp32 accumulator in VMEM scratch. The inner
+loop is rank-2 VPU min+add per dimension (no rank-3 temporaries), i.e. the
+MXU is idle by construction — this kernel's roofline is the VPU, not the
+systolic array, which DESIGN.md §2 discusses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _minsum_kernel(x_ref, y_ref, out_ref, acc, *, bd: int, n_d_steps: int):
+    d_step = pl.program_id(2)
+
+    @pl.when(d_step == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc[...])
+
+    x = x_ref[...]   # (BM, BD)
+    y = y_ref[...]   # (BN, BD)
+
+    def body(d, a):
+        return a + jnp.minimum(x[:, d][:, None], y[:, d][None, :])
+
+    acc[...] = jax.lax.fori_loop(0, bd, body, acc[...])
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _emit():
+        out_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
+def min_sum_pallas(x: jax.Array, y: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bd: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """x: (m, D), y: (n, D) nonneg -> (m, n) fp32 min-sums."""
+    m, d = x.shape
+    n = y.shape[0]
+    bm, bn, bd = min(bm, m), min(bn, n), min(bd, d)
+    pad_m, pad_n, pad_d = (-m) % bm, (-n) % bn, (-d) % bd
+    # zero-padding D adds min(0,0)=0 to the sum: harmless.
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_m), (0, pad_d)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    mp, np_, dp_ = xp.shape[0], yp.shape[0], xp.shape[1]
+    n_d_steps = dp_ // bd
+
+    out = pl.pallas_call(
+        functools.partial(_minsum_kernel, bd=bd, n_d_steps=n_d_steps),
+        grid=(mp // bm, np_ // bn, n_d_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bd), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bn, bd), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
+def minmax_gram_pallas(x: jax.Array, y: jax.Array, *, bm: int = 128,
+                       bn: int = 128, bd: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    x = jnp.maximum(x.astype(jnp.float32), 0.0)
+    y = jnp.maximum(y.astype(jnp.float32), 0.0)
+    mins = min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+    maxs = jnp.sum(x, -1)[:, None] + jnp.sum(y, -1)[None, :] - mins
+    return mins / jnp.maximum(maxs, 1e-30)

@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+
+On TPU the Mosaic kernels run natively; everywhere else (this CPU
+container, debugging) ``interpret=True`` executes the same kernel body via
+the Pallas interpreter, so correctness is validated on CPU against ref.py
+while the BlockSpec tiling is exactly what ships to TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cws import CWSParams
+from repro.kernels.cws_hash import cws_hash_pallas
+from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
+from repro.kernels import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cws_hash(x: jax.Array, params: CWSParams, *, bn: int = 128,
+             bk: int = 128, bd: int = 256, interpret: bool | None = None):
+    """Pallas CWS: x (n, D) nonneg -> (i*, t*) each (n, k) int32."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return cws_hash_pallas(x, params.r, params.log_c, params.beta,
+                           bn=bn, bk=bk, bd=bd, interpret=interpret)
+
+
+def minmax_gram(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+                bd: int = 256, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return minmax_gram_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+
+
+def min_sum(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
+            bd: int = 256, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = not _on_tpu()
+    return min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+
+
+# re-export oracles for test convenience
+cws_hash_ref = ref.cws_hash_ref
+minmax_gram_ref = ref.minmax_gram_ref
+min_sum_ref = ref.min_sum_ref

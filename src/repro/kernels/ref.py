@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (bitwise-comparable semantics).
+
+These are deliberately the *naive* formulations — 3D broadcast + argmin —
+so the tiled kernels are checked against an implementation with no shared
+code or tiling logic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cws_hash_ref(x: jax.Array, r: jax.Array, log_c: jax.Array,
+                 beta: jax.Array):
+    """x: (n, D) nonneg; r/log_c/beta: (D, k). Returns (i*, t*) each (n, k).
+
+    log a_i = log c_i - r_i (floor(log u_i / r_i + beta_i) - beta_i + 1)
+    """
+    x = x.astype(jnp.float32)
+    logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+    lu = logu[:, :, None]                                  # (n, D, 1)
+    t = jnp.floor(lu / r[None] + beta[None])               # (n, D, k)
+    log_a = log_c[None] - r[None] * (t - beta[None] + 1.0)
+    log_a = jnp.where(jnp.isfinite(lu), log_a, jnp.inf)
+    i_star = jnp.argmin(log_a, axis=1).astype(jnp.int32)
+    t_star = jnp.take_along_axis(t, i_star[:, None, :], axis=1)[:, 0, :]
+    t_star = jnp.clip(t_star, -2 ** 30, 2 ** 30).astype(jnp.int32)
+    all_zero = ~jnp.any(jnp.isfinite(logu), axis=1)
+    i_star = jnp.where(all_zero[:, None], -1, i_star)
+    t_star = jnp.where(all_zero[:, None], 0, t_star)
+    return i_star, t_star
+
+
+def minmax_gram_ref(x: jax.Array, y: jax.Array):
+    """x: (m, D), y: (n, D) nonneg -> K_MM (m, n) in fp32."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    mins = jnp.sum(jnp.minimum(x[:, None, :], y[None, :, :]), axis=-1)
+    maxs = jnp.sum(jnp.maximum(x[:, None, :], y[None, :, :]), axis=-1)
+    return mins / jnp.maximum(maxs, 1e-30)
+
+
+def min_sum_ref(x: jax.Array, y: jax.Array):
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return jnp.sum(jnp.minimum(x[:, None, :], y[None, :, :]), axis=-1)

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  2. constructs the jitted train/prefill/decode step with full FSDP x TP
+     (+pod DP) shardings from ShapeDtypeStruct inputs (no allocation),
+  3. ``.lower().compile()`` — any sharding mismatch / OOM-at-compile /
+     unsupported collective fails the cell,
+  4. records memory_analysis(), cost_analysis(), and loop-aware HLO stats
+     (FLOPs / bytes / collective bytes, see hlo_analysis.py) into
+     ``benchmarks/results/dryrun/<cell>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --all                 # every cell, 1 pod
+  python -m repro.launch.dryrun --all --multipod      # every cell, 2 pods
+  python -m repro.launch.dryrun --arch gemma3_12b --shape train_4k
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, cells, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_caches
+from repro.models.sharding import make_rules, use_rules
+from repro.training import (TrainHparams, make_train_step, make_serve_steps,
+                            param_pspecs, cache_pspecs, input_specs,
+                            state_pspecs)
+from repro.training.trainer import init_train_state
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "benchmarks" / "results" / "dryrun"
+
+# per-arch microbatching for the train_4k cell (memory policy, DESIGN.md §5)
+N_MICRO = {
+    "nemotron_4_340b": 16,
+    "llama4_maverick_400b_a17b": 8,
+    "granite_34b": 4,
+    "gemma3_12b": 2,
+    "pixtral_12b": 2,
+    "starcoder2_7b": 2,
+    "musicgen_large": 1,
+    "olmoe_1b_7b": 4,
+    "mamba2_780m": 1,
+    "recurrentgemma_2b": 1,
+}
+
+
+def _sds_tree(shapes, specs, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda l, sp: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        shapes, specs)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    cfg = get_config(arch, "full")
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    seq_len, global_batch, kind = SHAPES[shape_name]
+    long = shape_name.startswith("long")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(mesh)
+    hp = TrainHparams(n_microbatches=N_MICRO.get(arch, 1)
+                      if kind == "train" else 1)
+
+    t0 = time.time()
+    with mesh:
+        ins = input_specs(cfg, rules, shape=kind, seq_len=seq_len,
+                          global_batch=global_batch)
+        if kind == "train":
+            step = make_train_step(cfg, hp, rules)
+            state_shapes = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), cfg, hp))
+            state_sds = _sds_tree(state_shapes, state_pspecs(cfg, rules, hp),
+                                  mesh)
+            jitted = jax.jit(step, donate_argnums=0)
+            lowered = jitted.lower(state_sds, ins)
+        else:
+            prefill_step, decode_one = make_serve_steps(cfg, rules)
+            param_shapes = jax.eval_shape(
+                lambda: __import__("repro.models", fromlist=["init_model"]
+                                   ).init_model(jax.random.PRNGKey(0), cfg))
+            pspecs = param_pspecs(cfg, rules)
+            params_sds = _sds_tree(param_shapes, pspecs, mesh)
+            cache_shapes = jax.eval_shape(
+                lambda: init_caches(cfg, global_batch, seq_len, long=long))
+            cspecs = cache_pspecs(cfg, rules, batch=global_batch,
+                                  max_len=seq_len, long=long)
+            caches_sds = _sds_tree(cache_shapes, cspecs, mesh)
+            if kind == "prefill":
+                jitted = jax.jit(prefill_step, donate_argnums=2)
+                lowered = jitted.lower(params_sds, ins["inputs"], caches_sds)
+            else:
+                jitted = jax.jit(decode_one, donate_argnums=3)
+                lowered = jitted.lower(params_sds, ins["tokens"],
+                                       ins["pos"], caches_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    n_dev = mesh.devices.size
+    stats = hlo_analysis.analyze(text, n_dev)
+    # cache the HLO so the roofline accounting can be re-run offline
+    import gzip
+    hlo_dir = RESULTS_DIR.parent / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    with gzip.open(hlo_dir / f"{tag}.txt.gz", "wt") as f:
+        f.write(text)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "seq_len": seq_len,
+        "global_batch": global_batch,
+        "n_microbatches": hp.n_microbatches,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {k: cost.get(k) for k in
+                          ("flops", "bytes accessed")},
+        "hlo": {
+            "dot_flops_per_device": stats.dot_flops,
+            "bytes_per_device": stats.bytes_accessed,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_total_bytes": stats.total_collective_bytes,
+            "n_collectives": stats.n_collectives,
+            "loop_trips": sorted(stats.loop_trips, reverse=True)[:12],
+        },
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return result
+
+
+def reanalyze():
+    """Re-run the HLO accounting over cached compiled text (no recompiles)."""
+    import gzip
+    hlo_dir = RESULTS_DIR.parent / "hlo"
+    for f in sorted(hlo_dir.glob("*.txt.gz")):
+        tag = f.name[:-len(".txt.gz")]
+        out_path = RESULTS_DIR / f"{tag}.json"
+        if not out_path.exists():
+            continue
+        res = json.loads(out_path.read_text())
+        with gzip.open(f, "rt") as fh:
+            text = fh.read()
+        stats = hlo_analysis.analyze(text, res["n_devices"])
+        res["hlo"] = {
+            "dot_flops_per_device": stats.dot_flops,
+            "bytes_per_device": stats.bytes_accessed,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_total_bytes": stats.total_collective_bytes,
+            "n_collectives": stats.n_collectives,
+            "loop_trips": sorted(stats.loop_trips, reverse=True)[:12],
+        }
+        out_path.write_text(json.dumps(res, indent=1))
+        print(f"[rean] {tag}: flops={stats.dot_flops:.3e} "
+              f"bytes={stats.bytes_accessed:.3e} "
+              f"coll={stats.total_collective_bytes:.3e}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze()
+        return
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    if args.all:
+        todo = cells()
+    else:
+        assert args.arch and args.shape
+        todo = [(args.arch, args.shape)]
+    if args.multipod:
+        todo = [(a, s, True) for a, s in todo]
+    else:
+        todo = [(a, s, False) for a, s in todo]
+
+    failures = []
+    for arch, shape, mp in todo:
+        tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+        out_path = RESULTS_DIR / f"{tag}.json"
+        if out_path.exists() and not args.force:
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[run ] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape, multi_pod=mp)
+            out_path.write_text(json.dumps(res, indent=1))
+            peak = res["memory"]["peak_est_bytes"] / 2**30
+            print(f"[ ok ] {tag}: peak/dev={peak:.2f} GiB "
+                  f"flops/dev={res['hlo']['dot_flops_per_device']:.3e} "
+                  f"coll={res['hlo']['collective_total_bytes']:.3e}B "
+                  f"compile={res['compile_s']}s", flush=True)
+        except Exception as e:
+            failures.append((tag, repr(e)))
+            print(f"[FAIL] {tag}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print("\nall cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Static analysis of compiled HLO text: loop-aware FLOPs / bytes /
+collective-bytes accounting for the roofline model.
+
+XLA's ``compiled.cost_analysis()`` reports a *single execution* of each
+computation — ``while`` bodies (every ``lax.scan``: the layer stack, the
+microbatch accumulation, the flash-attention KV loop ...) are counted
+once. For a 96-layer scanned model that understates FLOPs by ~96x. This
+module parses ``compiled.as_text()`` into a computation call graph,
+recovers static trip counts from each loop's condition computation
+(XLA materializes ``compare(counter, constant(N))``), and propagates
+multipliers from ENTRY down the graph.
+
+Byte accounting (documented approximation, see EXPERIMENTS.md §Roofline):
+only "materializing" ops count (dot/conv/gather/scatter/slice-updates/
+reduce/collectives/parameters); elementwise chains are treated as fused —
+mirroring what the TPU compiler would do, where this roofline lives.
+
+Collective wire-bytes per device:
+    all-reduce          2 * bytes(out)        (reduce-scatter + all-gather)
+    all-gather          bytes(out)
+    reduce-scatter      bytes(out) * group
+    all-to-all          bytes(out)
+    collective-permute  bytes(out)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s*(\w[\w\-]*)\(")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations)=\{?%?([\w\.\-, %]+)\}?")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# HBM-traffic model (TPU roofline): data moves at FUSION boundaries and at
+# tensor-contraction / data-movement ops; bytes = operands + outputs.
+# Elementwise ops inside fusions are register/VMEM-level and free;
+# parameters/constants/gte/tuple/bitcast produce no traffic themselves
+# (their consumers' operand-bytes account for the reads).
+_BYTES_OPS = {
+    "fusion", "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "reduce", "reduce-window", "sort",
+    "select-and-scatter", "concatenate", "pad", "copy", "cholesky",
+    "triangular-solve",
+}
+
+
+def _shapes_bytes(sig: str) -> int:
+    """Total bytes of all array shapes appearing in a type signature."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_bytes: int
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    # (callee, kind): kind 'while_body' gets the loop multiplier
+    calls: List[Tuple[str, str]]
+    trip_const: Optional[int] = None   # if this is a condition computation
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # computation header: `%name (args) -> type {` or `ENTRY %name ...{`
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$",
+                     stripped)
+        if m and not stripped.startswith("//"):
+            cur = Computation(name=m.group(1), instrs=[], calls=[])
+            comps[m.group(1)] = cur
+            continue
+        if cur is None or "=" not in stripped:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, sig, op = mi.groups()
+        out_bytes = _shapes_bytes(sig)
+        cur.instrs.append(Instr(name=name, out_bytes=out_bytes, op=op,
+                                line=stripped))
+        if op == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", stripped)
+            mc = re.search(r"condition=%?([\w\.\-]+)", stripped)
+            if mb:
+                # pack the matching condition with the body so nested /
+                # multiple loops in one computation pair up correctly
+                cur.calls.append((mb.group(1) + "|" +
+                                  (mc.group(1) if mc else ""), "while"))
+        elif op == "fusion":
+            mt = re.search(r"calls=%?([\w\.\-]+)", stripped)
+            if mt:
+                cur.calls.append((mt.group(1), "fusion"))
+        elif op in ("call", "custom-call", "map"):
+            mt = re.search(r"to_apply=%?([\w\.\-]+)", stripped)
+            if mt:
+                cur.calls.append((mt.group(1), "call"))
+        elif op == "conditional":
+            mt = re.search(r"branch_computations=\{([^}]*)\}", stripped)
+            if mt:
+                for c in mt.group(1).split(","):
+                    cur.calls.append((c.strip().lstrip("%"), "branch"))
+    # recover trip counts: max integer constant reachable from a loop's
+    # condition computation (XLA compares the counter against it; the
+    # compare itself may live in a fused sub-computation)
+    def consts_of(name, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 3:
+            return []
+        vals = [int(x) for x in re.findall(
+            r"constant\((\d+)\)", "\n".join(i.line for i in comp.instrs))]
+        for callee, kind in comp.calls:
+            if kind in ("call", "branch"):
+                vals += consts_of(callee, depth + 1)
+        # fusion sub-computations referenced via calls=
+        for i in comp.instrs:
+            m = re.search(r"calls=%?([\w\.\-]+)", i.line)
+            if m:
+                vals += consts_of(m.group(1), depth + 1)
+        return vals
+
+    for comp in comps.values():
+        vals = consts_of(comp.name)
+        if vals:
+            comp.trip_const = max(vals)
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    n_collectives: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+    loop_trips: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _dot_flops(instr: Instr, shape_env: Dict[str, int],
+               dim_env: Dict[str, Tuple[int, ...]]) -> float:
+    """FLOPs of a dot: 2 * prod(output dims) * prod(contracting dims)."""
+    # output dims from the instruction signature
+    m = _SHAPE_RE.search(instr.line.split("=")[1])
+    if not m:
+        return 0.0
+    out_elems = 1
+    for d in m.group(2).split(","):
+        if d:
+            out_elems *= int(d)
+    # contracting size: lhs shape / (out / rhs batch...) — read operand dims
+    ml = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.line)
+    mo = re.search(r"\(([^)]*)\)", instr.line[instr.line.find(instr.op):])
+    if not ml or not mo:
+        return 2.0 * out_elems  # fallback
+    operands = [o.strip().lstrip("%") for o in mo.group(1).split(",")]
+    lhs_dims = dim_env.get(operands[0]) if operands else None
+    if lhs_dims is None:
+        return 2.0 * out_elems
+    contract = 1
+    for idx in ml.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def analyze(text: str, n_devices: int) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    stats = HLOStats()
+    seen: set = set()
+
+    def _operands(ins):
+        mo = re.search(r"\(([^)]*)\)", ins.line[ins.line.find(ins.op):])
+        if not mo:
+            return []
+        return [o.strip().lstrip("%") for o in mo.group(1).split(",") if o]
+
+    def _fusion_param_traffic(callee: str, op_names, bytes_env) -> int:
+        """Traffic of a fusion's inputs: a parameter consumed ONLY via
+        dynamic-slice inside the fused computation moves slice-bytes per
+        call, not its full (possibly loop-stacked) size."""
+        inner = comps.get(callee)
+        if inner is None:
+            return sum(bytes_env.get(o, 0) for o in op_names)
+        # parameter index -> inner instruction name
+        pname = {}
+        for ins in inner.instrs:
+            mp = re.search(r"parameter\((\d+)\)", ins.line)
+            if mp and ins.op == "parameter":
+                pname[int(mp.group(1))] = ins.name
+        total = 0
+        for i, outer in enumerate(op_names):
+            inner_name = pname.get(i)
+            full = bytes_env.get(outer, 0)
+            if inner_name is None:
+                total += full
+                continue
+            consumers = [ins for ins in inner.instrs
+                         if inner_name in _operands(ins)]
+            if consumers and all(c.op == "dynamic-slice"
+                                 for c in consumers):
+                total += max(c.out_bytes for c in consumers)
+            else:
+                total += full
+        return total
+
+    def walk(name: str, mult: float, in_fusion: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        # per-instruction (dims, bytes) environment for operand lookups
+        dim_env: Dict[str, Tuple[int, ...]] = {}
+        bytes_env: Dict[str, int] = {}
+        for ins in comp.instrs:
+            m = _SHAPE_RE.search(ins.line.split("=")[1])
+            if m:
+                dims = tuple(int(d) for d in m.group(2).split(",") if d)
+                dim_env[ins.name] = dims
+            bytes_env[ins.name] = ins.out_bytes
+
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                stats.dot_flops += mult * _dot_flops(ins, {}, dim_env)
+            if not in_fusion and ins.op in _BYTES_OPS:
+                ops_ = _operands(ins)
+                if ins.op == "dynamic-slice":
+                    b = 2 * ins.out_bytes
+                elif ins.op == "dynamic-update-slice":
+                    # read+write of the updated region (output aliases the
+                    # full buffer but only the slice moves)
+                    upd = bytes_env.get(ops_[1], 0) if len(ops_) > 1 else 0
+                    b = 3 * upd
+                elif ins.op in ("gather", "scatter"):
+                    b = 2 * ins.out_bytes
+                elif ins.op == "fusion":
+                    mt = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                    callee = mt.group(1) if mt else ""
+                    b = ins.out_bytes + _fusion_param_traffic(
+                        callee, ops_, bytes_env)
+                else:
+                    b = ins.out_bytes + sum(bytes_env.get(o, 0)
+                                            for o in ops_)
+                stats.bytes_accessed += mult * b
+            if not in_fusion:
+                for coll in COLLECTIVES:
+                    if ins.op == coll or ins.op == f"{coll}-start":
+                        g = _group_size(ins.line, n_devices)
+                        if coll == "all-reduce":
+                            wire = 2.0 * ins.out_bytes
+                        elif coll == "reduce-scatter":
+                            wire = float(ins.out_bytes) * g
+                        else:
+                            wire = float(ins.out_bytes)
+                        stats.collective_bytes[coll] += mult * wire
+                        stats.n_collectives[coll] += \
+                            int(mult) if mult < 1e7 else 0
+        for callee, kind in comp.calls:
+            if kind == "while":
+                body, _, cond = callee.partition("|")
+                trips = 1
+                if cond and comps.get(cond) and comps[cond].trip_const:
+                    trips = max(int(comps[cond].trip_const), 1)
+                if (name, body) not in seen:
+                    stats.loop_trips.append(trips)
+                    seen.add((name, body))
+                walk(body, mult * trips, in_fusion)
+            elif kind in ("call", "branch"):
+                walk(callee, mult, in_fusion)
+            elif kind == "fusion":
+                # inner ops are register/VMEM level: count dot FLOPs only
+                walk(callee, mult, True)
+    walk(entry, 1.0, False)
+    return stats

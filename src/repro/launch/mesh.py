@@ -1,0 +1,22 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+the dry-run sees 512 forced host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist, as a (data=N, model=1) mesh — used by the
+    CPU examples and the single-host training driver."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

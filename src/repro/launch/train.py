@@ -1,0 +1,134 @@
+"""Training driver: config-driven, fault-tolerant, mesh-aware.
+
+Single-host CPU (examples, CI) and multi-host TPU use the same code: the
+mesh is (n_devices, 1) locally and 16x16 / 2x16x16 in production
+(``--production-mesh``). The RetryingTrainer + Checkpointer give
+restart-from-last-commit semantics; the loader state rides in the
+checkpoint so batches are neither replayed nor skipped.
+
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2_780m \
+      --variant smoke --steps 50 --global-batch 8 --seq-len 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.loader import TokenBatchLoader
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.sharding import make_rules
+from repro.runtime import RetryingTrainer
+from repro.training import (TrainHparams, make_train_step, state_pspecs,
+                            param_pspecs)
+from repro.training.trainer import init_train_state
+
+
+def build_trainer(cfg, hp: TrainHparams, *, global_batch: int, seq_len: int,
+                  ckpt_dir, mesh=None, seed: int = 0):
+    mesh = mesh or make_local_mesh()
+    rules = make_rules(mesh)
+    ck = Checkpointer(ckpt_dir) if ckpt_dir else None
+
+    class DictLoader:
+        """Adapts TokenBatchLoader tuples to the train_step batch dict."""
+
+        def __init__(self, inner):
+            self.inner = inner
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            toks, labels = next(self.inner)
+            return {"inputs": jnp.asarray(toks),
+                    "labels": jnp.asarray(labels)}
+
+        def snapshot(self):
+            return self.inner.snapshot()
+
+        def restore(self, snap):
+            self.inner.restore(snap)
+
+    def build():
+        loader = DictLoader(TokenBatchLoader(
+            vocab=cfg.vocab, global_batch=global_batch,
+            seq_len=seq_len, seed=seed,
+            process_index=jax.process_index(),
+            process_count=jax.process_count()))
+        with mesh:
+            state = init_train_state(jax.random.PRNGKey(seed), cfg, hp)
+            start = 0
+            if ck is not None:
+                template = jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+                restored, manifest = ck.restore_latest(template)
+                if restored is not None:
+                    state = restored
+                    loader.restore(manifest["extra"]["loader"])
+                    start = manifest["step"]
+            step_fn = jax.jit(make_train_step(cfg, hp, rules),
+                              donate_argnums=0)
+        return state, loader, step_fn, start
+
+    return build, ck, mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, args.variant)
+    hp = TrainHparams(lr=args.lr, total_steps=args.steps,
+                      warmup=max(args.steps // 20, 1),
+                      n_microbatches=args.microbatches,
+                      compress_grads=args.compress_grads)
+    mesh = make_production_mesh(multi_pod=args.multipod) \
+        if args.production_mesh else None
+    build, ck, mesh = build_trainer(
+        cfg, hp, global_batch=args.global_batch, seq_len=args.seq_len,
+        ckpt_dir=args.ckpt_dir, mesh=mesh)
+
+    t_last = [time.time()]
+
+    def hook(step, state, metrics, loader):
+        if step % args.log_every == 0:
+            dt = time.time() - t_last[0]
+            t_last[0] = time.time()
+            tok_s = args.global_batch * args.seq_len * args.log_every / dt
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"tok/s {tok_s:,.0f}", flush=True)
+        if ck is not None and step % args.ckpt_every == 0:
+            ck.save_async(step, state, extra={"loader": loader.snapshot()})
+
+    trainer = RetryingTrainer(build)
+    with mesh:
+        state = trainer.run(args.steps, hooks=[hook])
+    if ck is not None:
+        ck.save_async(args.steps, state, extra={"loader": {"step": args.steps,
+                                                           "seed": 0}})
+        ck.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.config import ModelConfig, MoECfg, SSMCfg
+from repro.models.model import (init_model, forward, train_loss, prefill,
+                                decode_step, init_caches)
+
+__all__ = ["ModelConfig", "MoECfg", "SSMCfg", "init_model", "forward",
+           "train_loss", "prefill", "decode_step", "init_caches"]

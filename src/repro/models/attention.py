@@ -1,0 +1,382 @@
+"""GQA attention: full/sliding-window, train + prefill + KV-cache decode.
+
+Execution paths:
+  * ``naive``   — materializes (B, H, Sq, Sk) scores. Paper-faithful-era
+                  baseline for the §Perf log; fine for short sequences.
+  * ``chunked`` — flash-style online softmax over KV blocks (lax.scan) with
+                  runtime skip (lax.cond) of blocks wholly outside the
+                  causal/window range; memory O(S * chunk).
+  * ``decode``  — single-query attention against a (possibly sequence-
+                  sharded) KV cache with partial-softmax combining: under
+                  GSPMD the only cross-shard traffic is the tiny
+                  (B, H) max/sum reductions, never the 524k cache itself.
+
+GQA is computed in grouped layout q:(B,S,G,R,Dh) vs kv:(B,S,G,Dh) — the
+K/V tensors are never materialized at R * kv size.
+
+Sharding modes (cfg-independent, decided by the installed axis rules +
+head divisibility):
+  * ``seq``   — sequence-parallel attention: q/scores sharded on S over
+                `model`; works for every head count (llama4's 40, star-
+                coder2's 36, recurrentgemma's 10). K/V are all-gathered
+                over `model` by GSPMD (Megatron-SP pattern).
+  * ``heads`` — classic TP when n_heads % tp == 0: repeat KV to flat heads
+                and shard the head dim; no K/V gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, trunc_normal
+from repro.models.sharding import shard, current_rules
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.master_dtype
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    return {
+        "wq": trunc_normal(ks[0], (d, cfg.q_flat), scale, dt),
+        "wk": trunc_normal(ks[1], (d, cfg.kv_flat), scale, dt),
+        "wv": trunc_normal(ks[2], (d, cfg.kv_flat), scale, dt),
+        "wo": trunc_normal(ks[3], (cfg.q_flat, d), cfg.q_flat ** -0.5, dt),
+    }
+
+
+class KVCache(NamedTuple):
+    k: Array        # (B, S_max, G, Dh)
+    v: Array
+    length: Array   # () int32
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: ModelConfig,
+                  long: bool = False) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    seq_axis = "long_seq" if long else "kv_seq"
+    k = shard(jnp.zeros(shape, cfg.compute_dtype), "batch", seq_axis, None, None)
+    v = shard(jnp.zeros(shape, cfg.compute_dtype), "batch", seq_axis, None, None)
+    return KVCache(k=k, v=v, length=jnp.zeros((), jnp.int32))
+
+
+def tp_size() -> int:
+    rules = current_rules()
+    if rules is None:
+        return 1
+    tp = rules.rules.get("tp")
+    if tp is None:
+        return 1
+    axes = (tp,) if isinstance(tp, str) else tp
+    size = 1
+    for a in axes:
+        size *= rules.mesh.shape[a]
+    return size
+
+
+def _block_mask(sq: int, sk: int, off, window: int) -> Array:
+    """m[i, j] = (j <= i + off) & (j > i + off - window)."""
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi + off
+    if window > 0:
+        m &= kj > qi + off - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# grouped (GQA-native) attention cores
+# ---------------------------------------------------------------------------
+
+def _naive_grouped(q5, k, v, *, window: int) -> Array:
+    # q5: (b, sq, g, r, d); k/v: (b, sk, g, d)
+    sq, sk = q5.shape[1], k.shape[1]
+    scale = q5.shape[-1] ** -0.5
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q5, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _block_mask(sq, sk, 0, window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(q5.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q5.dtype)
+
+
+def _chunked_grouped(q5, k, v, *, window: int, chunk: int) -> Array:
+    b, s, g, r, dh = q5.shape
+    scale = dh ** -0.5
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q5 = jnp.pad(q5, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = q5.shape[1]
+    n_blk = sp // chunk
+    qs = jnp.moveaxis(q5.reshape(b, n_blk, chunk, g, r, dh), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, n_blk, chunk, g, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_blk, chunk, g, dh), 1, 0)
+
+    def q_block(qi, qc):
+        q_off = qi * chunk
+        m0 = jnp.full((b, g, r, chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, chunk, 1), jnp.float32)
+        o0 = jnp.zeros((b, chunk, g, r, dh), jnp.float32)
+
+        def kv_step(carry, inp):
+            ki, kc, vc = inp
+            k_off = ki * chunk
+
+            def compute(carry):
+                m, l, o = carry
+                s_blk = jnp.einsum("bqgrd,bkgd->bgrqk", qc, kc,
+                                   preferred_element_type=jnp.float32) * scale
+                mask = _block_mask(chunk, chunk, q_off - k_off, window)
+                s_blk = jnp.where(mask[None, None, None], s_blk, NEG_INF)
+                m_new = jnp.maximum(m, s_blk.max(axis=-1, keepdims=True))
+                p = jnp.exp(s_blk - m_new)
+                corr = jnp.exp(m - m_new)
+                l_new = corr * l + p.sum(axis=-1, keepdims=True)
+                pv = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(qc.dtype), vc,
+                                preferred_element_type=jnp.float32)
+                o_new = jnp.moveaxis(corr[..., 0], (1, 2, 3), (2, 3, 1)
+                                     )[..., None] * o + pv
+                return m_new, l_new, o_new
+
+            # runtime skip of blocks wholly outside the causal/window range
+            needed = k_off <= q_off
+            if window > 0:
+                needed &= k_off >= q_off - window - chunk + 1
+            carry = jax.lax.cond(needed, compute, lambda c: c, carry)
+            return carry, None
+
+        idx = jnp.arange(n_blk)
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), (idx, ks, vs))
+        l_t = jnp.moveaxis(l[..., 0], (1, 2, 3), (2, 3, 1))[..., None]
+        return (o / jnp.maximum(l_t, 1e-30)).astype(q5.dtype)
+
+    # recompute probs in the backward pass (flash semantics): without this
+    # autodiff saves every (q, kv) block's fp32 scores — measured 15 x 5 GiB
+    # buffers on the recurrentgemma train cell.
+    q_block = jax.checkpoint(q_block)
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(n_blk), qs))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sp, g, r, dh)
+    return out[:, :s]
+
+
+def _decode_grouped(q5, cache: KVCache, *, window: int) -> Array:
+    # q5: (b, 1, g, r, d); cache.k: (b, S, g, d) possibly seq-sharded.
+    s = cache.k.shape[1]
+    scale = q5.shape[-1] ** -0.5
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q5, cache.k,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, None, None, None, :]
+    valid = pos < cache.length
+    if window > 0:
+        valid = valid & (pos >= cache.length - window)
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(q5.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
+    l_t = jnp.moveaxis(l[..., 0], (1, 2, 3), (2, 3, 1))[..., None]
+    return (out / jnp.maximum(l_t, 1e-30)).astype(q5.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flat-head (classic TP) core — used when n_heads % tp == 0
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    if n_rep == 1:
+        return k
+    b, s, g, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, g, n_rep, d)
+                            ).reshape(b, s, g * n_rep, d)
+
+
+def _naive_flat(q, k, v, *, window: int) -> Array:
+    sq, sk = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = _block_mask(sq, sk, 0, window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _chunked_flat(q, k, v, *, window: int, chunk: int) -> Array:
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = q.shape[1]
+    n_blk = sp // chunk
+    qs = jnp.moveaxis(q.reshape(b, n_blk, chunk, h, dh), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, n_blk, chunk, h, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n_blk, chunk, h, dh), 1, 0)
+
+    def q_block(qi, qc):
+        q_off = qi * chunk
+        m0 = jnp.full((b, h, chunk, 1), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk, 1), jnp.float32)
+        o0 = jnp.zeros((b, chunk, h, dh), jnp.float32)
+
+        def kv_step(carry, inp):
+            ki, kc, vc = inp
+            k_off = ki * chunk
+
+            def compute(carry):
+                m, l, o = carry
+                s_blk = jnp.einsum("bqhd,bkhd->bhqk", qc, kc,
+                                   preferred_element_type=jnp.float32) * scale
+                mask = _block_mask(chunk, chunk, q_off - k_off, window)
+                s_blk = jnp.where(mask[None, None], s_blk, NEG_INF)
+                m_new = jnp.maximum(m, s_blk.max(axis=-1, keepdims=True))
+                p = jnp.exp(s_blk - m_new)
+                corr = jnp.exp(m - m_new)
+                l_new = corr * l + p.sum(axis=-1, keepdims=True)
+                pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(qc.dtype), vc,
+                                preferred_element_type=jnp.float32)
+                o_new = jnp.swapaxes(corr, 1, 2) * o + pv
+                return m_new, l_new, o_new
+
+            needed = k_off <= q_off
+            if window > 0:
+                needed &= k_off >= q_off - window - chunk + 1
+            return jax.lax.cond(needed, compute, lambda c: c, carry), None
+
+        (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                    (jnp.arange(n_blk), ks, vs))
+        return (o / jnp.maximum(jnp.swapaxes(l, 1, 2), 1e-30)).astype(q.dtype)
+
+    q_block = jax.checkpoint(q_block)   # flash semantics; see grouped path
+    out = jax.lax.map(lambda args: q_block(*args), (jnp.arange(n_blk), qs))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sp, h, dh)
+    return out[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# public layer
+# ---------------------------------------------------------------------------
+
+def attention(params: dict, x: Array, cfg: ModelConfig, *,
+              kind: str, positions: Array,
+              cache: Optional[KVCache] = None,
+              update_cache: bool = False,
+              rope_theta: Optional[float] = None):
+    """Returns (out, new_cache). x: (B, S, D)."""
+    dt = cfg.compute_dtype
+    b, s, d = x.shape
+    h, g, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    r = h // g
+    window = cfg.window if kind == "local" else 0
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+
+    x = shard(x, "batch", None, None)
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,df->bsf", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,df->bsf", x, params["wv"].astype(dt))
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, g, dh)
+    v = v.reshape(b, s, g, dh)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    if cfg.qk_norm:
+        q = _qknorm(q, dt)
+        k = _qknorm(k, dt)
+
+    tp = tp_size()
+    heads_mode = (h % tp == 0) and cache is None
+
+    new_cache = cache
+    rolling = cache is not None and window > 0 and cache.k.shape[1] <= window
+    if cache is not None and update_cache:
+        m_len = cache.k.shape[1]
+        if s == 1:
+            # rolling caches wrap; full caches never reach m_len
+            wpos = cache.length % m_len
+            k_new = jax.lax.dynamic_update_slice_in_dim(
+                cache.k, k.astype(cache.k.dtype), wpos, axis=1)
+            v_new = jax.lax.dynamic_update_slice_in_dim(
+                cache.v, v.astype(cache.v.dtype), wpos, axis=1)
+        elif s >= m_len:
+            # rolling cache: token t lives at slot t % m_len; the last
+            # m_len tokens are a rotation by s % m_len.
+            k_new = jnp.roll(k[:, s - m_len:], s % m_len, axis=1
+                             ).astype(cache.k.dtype)
+            v_new = jnp.roll(v[:, s - m_len:], s % m_len, axis=1
+                             ).astype(cache.v.dtype)
+            k_new = shard(k_new, "batch", "kv_seq", None, None)
+            v_new = shard(v_new, "batch", "kv_seq", None, None)
+        else:
+            pad_len = m_len - s
+            k_new = jnp.pad(k.astype(cache.k.dtype),
+                            ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+            v_new = jnp.pad(v.astype(cache.v.dtype),
+                            ((0, 0), (0, pad_len), (0, 0), (0, 0)))
+            k_new = shard(k_new, "batch", "kv_seq", None, None)
+            v_new = shard(v_new, "batch", "kv_seq", None, None)
+        new_cache = KVCache(k=k_new, v=v_new, length=cache.length + s)
+
+    use_flash = (cfg.attn_impl == "flash" and tp == 1
+                 and (cache is None or s > 1) and s > cfg.attn_chunk)
+    if cache is not None and s == 1:
+        q5 = q.reshape(b, s, g, r, dh)
+        # rolling caches enforce the window structurally — no mask needed
+        out = _decode_grouped(q5, new_cache,
+                              window=0 if rolling else window)
+        out = out.reshape(b, s, h, dh)
+    elif use_flash:
+        # Pallas flash kernel: scores stay in VMEM (interpret mode off-TPU).
+        # Used when attention is not sharded (tp==1); the sharded path
+        # needs a shard_map wrapper (see DESIGN.md §7 / EXPERIMENTS §Perf).
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, window, cfg.attn_chunk,
+                              jax.default_backend() != "tpu")
+    elif heads_mode:
+        kk = _repeat_kv(k, r)
+        vv = _repeat_kv(v, r)
+        q = shard(q, "batch", None, "tp", None)
+        kk = shard(kk, "batch", None, "tp", None)
+        vv = shard(vv, "batch", None, "tp", None)
+        if cfg.attn_impl == "naive" or s <= cfg.attn_chunk:
+            out = _naive_flat(q, kk, vv, window=window)
+        else:
+            out = _chunked_flat(q, kk, vv, window=window, chunk=cfg.attn_chunk)
+        out = shard(out, "batch", None, "tp", None)
+    else:
+        q5 = q.reshape(b, s, g, r, dh)
+        q5 = shard(q5, "batch", "sp", None, None, None)
+        if cfg.attn_impl == "naive" or s <= cfg.attn_chunk:
+            out = _naive_grouped(q5, k, v, window=window)
+        else:
+            out = _chunked_grouped(q5, k, v, window=window,
+                                   chunk=cfg.attn_chunk)
+        out = shard(out, "batch", "sp", None, None, None)
+        out = out.reshape(b, s, h, dh)
+
+    out = out.astype(dt).reshape(b, s, h * dh)
+    proj = jnp.einsum("bsf,fd->bsd", out, params["wo"].astype(dt))
+    return shard(proj, "batch", "sp", None), new_cache
+
+
+def _qknorm(q: Array, dt) -> Array:
+    n = jax.lax.rsqrt(jnp.mean(jnp.square(q.astype(jnp.float32)), -1,
+                               keepdims=True) + 1e-6)
+    return (q.astype(jnp.float32) * n).astype(dt)

@@ -1,0 +1,63 @@
+"""CWSClassifierHead: the paper's pipeline as a first-class model head.
+
+Any backbone's nonnegative pooled features (post-ReLU) -> 0-bit CWS hash
+-> b_i-bit bucketing -> embedding-bag linear classifier. Because the hash
+codes are one-hot per hash, the classifier weight (k, 2^{b_i}, C) is
+exactly a (small) vocab-parallel embedding table and shards over `model`
+like the LM vocab (DESIGN.md §4).
+
+The CWS parameters are BUFFERS (not trained); the head is trained with the
+same embedding-bag machinery as repro.core.linear_model. At serving time
+the hashing runs as the Pallas kernel (repro.kernels.ops.cws_hash).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cws import CWSParams, make_cws_params, cws_hash
+from repro.core.hashing import encode
+from repro.models.config import ModelConfig
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+class CWSHeadParams(NamedTuple):
+    cws: CWSParams           # frozen hashing buffers (D, k)
+    table: Array             # (k, 2^{b_i}, n_classes) trainable
+    bias: Array              # (n_classes,)
+
+
+def init_cws_head(key, feature_dim: int, *, k: int, b_i: int,
+                  n_classes: int) -> CWSHeadParams:
+    cws = make_cws_params(key, feature_dim, k)
+    return CWSHeadParams(
+        cws=cws,
+        table=jnp.zeros((k, 1 << b_i, n_classes), jnp.float32),
+        bias=jnp.zeros((n_classes,), jnp.float32),
+    )
+
+
+def cws_head_logits(params: CWSHeadParams, features: Array, *,
+                    b_i: int, use_pallas: bool = False) -> Array:
+    """features: (B, D) -> logits (B, C). Nonnegativity enforced by ReLU
+    (the min-max kernel is defined on nonnegative data)."""
+    feats = jax.nn.relu(features.astype(jnp.float32))
+    if use_pallas:
+        from repro.kernels import ops
+        i_star, t_star = ops.cws_hash(feats, params.cws)
+    else:
+        i_star, t_star = cws_hash(feats, params.cws)
+    codes = encode(i_star, t_star, b_i=b_i)           # (B, k)
+    table = shard(params.table, None, "vocab", None)
+    gathered = jnp.take_along_axis(
+        table[None], codes[:, :, None, None].clip(0), axis=2)[:, :, 0, :]
+    return gathered.sum(axis=1) + params.bias
+
+
+def pool_hidden(hidden: Array) -> Array:
+    """(B, S, D) -> (B, D) mean-pool (backbone feature extraction)."""
+    return hidden.mean(axis=1)

@@ -1,0 +1,257 @@
+"""Config-driven decoder LM: init / forward / train loss / prefill / decode.
+
+The layer stack is organized as ``n_units`` repetitions of
+``cfg.block_pattern`` (e.g. gemma3: 5 local + 1 global per unit). Units are
+*stacked* (leading U axis on every param leaf) and executed with
+``lax.scan`` + ``jax.checkpoint`` — compile time and HLO size are O(1) in
+depth, which is what makes the 96-layer/340B dry-run compile in seconds.
+
+Caches mirror the params layout: a tuple (one entry per block in the
+pattern) of stacked (U, ...) cache pytrees, scanned alongside the params.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (chunked_cross_entropy, embed_tokens,
+                                 init_embed, init_mlp, init_rmsnorm,
+                                 lm_logits, mlp, rmsnorm)
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+ZERO_AUX = {"moe_lb_loss": jnp.float32(0.0), "moe_z_loss": jnp.float32(0.0),
+            "moe_dropped": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, kind: str, is_moe: bool) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_rmsnorm(cfg.d_model, cfg.master_dtype)}
+    if kind in ("attn", "local"):
+        p["mixer"] = attn_lib.init_attention(ks[0], cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm_lib.init_ssm(ks[0], cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_lib.init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":
+        p["norm2"] = init_rmsnorm(cfg.d_model, cfg.master_dtype)
+        p["mlp"] = moe_lib.init_moe(ks[1], cfg) if is_moe \
+            else init_mlp(ks[1], cfg)
+    return p
+
+
+def _init_unit(key, cfg: ModelConfig) -> dict:
+    unit = {}
+    for i, kind in enumerate(cfg.block_pattern):
+        unit[f"block{i}"] = _init_block(jax.random.fold_in(key, i), cfg,
+                                        kind, cfg.is_moe_block(i))
+    return unit
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    k_embed, k_units, k_final = jax.random.split(key, 3)
+    unit_keys = jax.random.split(k_units, cfg.n_units)
+    units = jax.vmap(lambda k: _init_unit(k, cfg))(unit_keys)
+    return {
+        "embed": init_embed(k_embed, cfg),
+        "units": units,
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.master_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
+                long: bool = False):
+    """Stacked (U, ...) caches, one entry per block in the pattern."""
+    u = cfg.n_units
+    entries = []
+    from repro.models.attention import tp_size
+    kv_head_sharded = cfg.n_kv_heads > 0 and \
+        cfg.n_kv_heads % max(tp_size(), 1) == 0 and tp_size() > 1
+    for i, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "local"):
+            m = max_len if kind == "attn" else min(cfg.window, max_len)
+            shape = (u, batch, m, cfg.n_kv_heads, cfg.head_dim_)
+            if kv_head_sharded and not long:
+                # divisible kv heads (musicgen 32, olmoe 16): shard heads
+                # over `model` — decode needs NO cross-shard softmax at all
+                axes = (None, "batch", None, "tp", None)
+            else:
+                seq_axis = "long_seq" if (long and kind == "attn") \
+                    else "kv_seq"
+                axes = (None, "batch", seq_axis, None, None)
+            k = shard(jnp.zeros(shape, cfg.compute_dtype), *axes)
+            v = shard(jnp.zeros(shape, cfg.compute_dtype), *axes)
+            entries.append(attn_lib.KVCache(
+                k=k, v=v, length=jnp.zeros((u,), jnp.int32)))
+        elif kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nheads = d_in // s.head_dim
+            conv = jnp.zeros((u, batch, s.d_conv - 1, d_in + 2 * s.d_state),
+                             cfg.compute_dtype)
+            h = shard(jnp.zeros((u, batch, nheads, s.head_dim, s.d_state),
+                                jnp.float32), None, "batch", "tp", None, None)
+            entries.append(ssm_lib.SSMState(
+                conv=conv, h=h, length=jnp.zeros((u,), jnp.int32)))
+        elif kind == "rglru":
+            w = cfg.rnn_width or cfg.d_model
+            h = shard(jnp.zeros((u, batch, w), jnp.float32),
+                      None, "batch", "tp")
+            conv = jnp.zeros((u, batch, 3, w), cfg.compute_dtype)
+            entries.append(rglru_lib.RGLRUState(
+                h=h, conv=conv, length=jnp.zeros((u,), jnp.int32)))
+    return tuple(entries)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(params: dict, x: Array, cfg: ModelConfig, *, kind: str,
+                 is_moe: bool, positions, cache, update_cache: bool):
+    aux = dict(ZERO_AUX)
+    h = rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        theta = cfg.rope_theta_global if (kind == "attn" and
+                                          cfg.rope_theta_global > 0) \
+            else cfg.rope_theta
+        mix, new_cache = attn_lib.attention(
+            params["mixer"], h, cfg, kind=kind, positions=positions,
+            cache=cache, update_cache=update_cache, rope_theta=theta)
+    elif kind == "ssm":
+        mix, new_cache = ssm_lib.ssm_block(
+            params["mixer"], h, cfg, state=cache, update_state=update_cache)
+    else:  # rglru
+        mix, new_cache = rglru_lib.rglru_block(
+            params["mixer"], h, cfg, state=cache, update_state=update_cache)
+    x = x + mix
+    if kind != "ssm":
+        h2 = rmsnorm(params["norm2"], x, cfg.norm_eps)
+        if is_moe:
+            # exact (dropless) capacity for small inference token counts;
+            # Switch-style capacity dropping otherwise (static shapes).
+            s = x.shape[1]
+            exact = cache is not None and s * cfg.moe.top_k <= 256
+            y, moe_aux = moe_lib.moe_mlp(params["mlp"], h2, cfg,
+                                         exact_capacity=exact)
+            aux.update(moe_aux)
+        else:
+            y = mlp(params["mlp"], h2, cfg)
+        x = x + y
+    return shard(x, "batch", "sp", None), new_cache, aux
+
+
+def _apply_unit(unit_params: dict, x: Array, cfg: ModelConfig, *,
+                positions, caches, update_cache: bool):
+    new_caches = []
+    aux_sum = dict(ZERO_AUX)
+    for i, kind in enumerate(cfg.block_pattern):
+        cache_i = caches[i] if caches is not None else None
+        x, nc, aux = _apply_block(
+            unit_params[f"block{i}"], x, cfg, kind=kind,
+            is_moe=cfg.is_moe_block(i), positions=positions,
+            cache=cache_i, update_cache=update_cache)
+        new_caches.append(nc)
+        aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+    return x, tuple(new_caches), aux_sum
+
+
+def forward(params: dict, inputs: Array, cfg: ModelConfig, *,
+            caches=None, update_cache: bool = False,
+            positions: Optional[Array] = None):
+    """inputs: (B, S) int tokens or (B, S, D) embeddings (vlm/audio stub).
+
+    Returns (hidden (B, S, D), new_caches, aux).
+    """
+    if inputs.ndim == 2:
+        x = embed_tokens(params["embed"], inputs, cfg)
+    else:
+        x = inputs.astype(cfg.compute_dtype)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])[None, :]
+    x = shard(x, "batch", "sp", None)
+
+    unit_fn = functools.partial(_apply_unit, cfg=cfg, positions=positions,
+                                update_cache=update_cache)
+
+    if cfg.scan_layers:
+        def body(carry, xs):
+            x, aux_sum = carry
+            unit_params, unit_caches = xs
+            x, new_caches, aux = unit_fn(unit_params, x, caches=unit_caches)
+            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+            return (x, aux_sum), new_caches
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, dict(ZERO_AUX)), (params["units"], caches))
+    else:
+        aux = dict(ZERO_AUX)
+        new_caches_list = []
+        for u in range(cfg.n_units):
+            unit_params = jax.tree_util.tree_map(lambda a: a[u],
+                                                 params["units"])
+            unit_caches = jax.tree_util.tree_map(lambda a: a[u], caches) \
+                if caches is not None else None
+            x, ncs, aux_u = unit_fn(unit_params, x, caches=unit_caches)
+            aux = {k: aux[k] + aux_u[k] for k in aux}
+            new_caches_list.append(ncs)
+        new_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_caches_list) \
+            if caches is not None else None
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+
+def train_loss(params: dict, inputs: Array, labels: Array,
+               cfg: ModelConfig) -> Tuple[Array, dict]:
+    hidden, _, aux = forward(params, inputs, cfg)
+    nll, n_tok = chunked_cross_entropy(params["embed"], hidden, labels, cfg)
+    loss = nll
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux["moe_lb_loss"] + 1e-3 * aux["moe_z_loss"]
+    metrics = {"nll": nll, "tokens": n_tok, **aux}
+    return loss, metrics
+
+
+def prefill(params: dict, inputs: Array, cfg: ModelConfig, caches):
+    """Process a full prompt, fill caches, return logits of last position."""
+    hidden, new_caches, _ = forward(params, inputs, cfg, caches=caches,
+                                    update_cache=True)
+    logits = lm_logits(params["embed"], hidden[:, -1:], cfg)
+    return logits[:, 0], new_caches
+
+
+def decode_step(params: dict, tokens: Array, pos: Array,
+                cfg: ModelConfig, caches):
+    """tokens: (B, 1) int (or (B, 1, D) embeddings); pos: () int32."""
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    hidden, new_caches, _ = forward(params, tokens, cfg, caches=caches,
+                                    update_cache=True, positions=positions)
+    logits = lm_logits(params["embed"], hidden, cfg)
+    return logits[:, 0], new_caches

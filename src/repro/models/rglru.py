@@ -1,0 +1,158 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train path: associative scan over time (log-depth, parallel); decode is a
+single fused step with O(width) state. The block follows Griffin's
+recurrent-block layout: x -> [linear -> conv1d(4) -> RG-LRU] * gelu(linear)
+-> linear out.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import trunc_normal
+from repro.models.sharding import shard
+
+Array = jax.Array
+C_FACTOR = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array       # (B, W)
+    conv: Array    # (B, d_conv-1, W)
+    length: Array
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rnn_width or d
+    dt = cfg.master_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": trunc_normal(ks[0], (d, w), d ** -0.5, dt),
+        "in_gate": trunc_normal(ks[1], (d, w), d ** -0.5, dt),
+        "conv_w": trunc_normal(ks[2], (4, w), 0.3, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": trunc_normal(ks[3], (w, w), w ** -0.5, dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": trunc_normal(ks[4], (w, w), w ** -0.5, dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a^c in [0.9, 0.999] at r=1 (Griffin app. A)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w)) / C_FACTOR)).astype(jnp.float32),
+        "out": trunc_normal(ks[5], (w, d), w ** -0.5, dt),
+    }
+
+
+def _chunked_linear_scan(a: Array, bb: Array, h0: Array,
+                         chunk: int = 256) -> Array:
+    """h_t = a_t h_{t-1} + b_t over axis 1, chunked.
+
+    A single full-length associative scan materializes O(log L) full
+    (B, L, W) fp32 intermediates — measured 117 GiB/device peak on the
+    recurrentgemma train cell. Chunking runs the log-depth scan inside
+    Q-sized chunks (working set ~log Q * B*Q*W) and a cheap sequential
+    lax.scan carry across the L/Q chunks.
+    """
+    b, l, w = a.shape
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        # padded steps: a=1, b=0 keeps the carry unchanged
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+    nc = a.shape[1] // q
+    a_c = jnp.moveaxis(a.reshape(b, nc, q, w), 1, 0)      # (nc, B, Q, W)
+    b_c = jnp.moveaxis(bb.reshape(b, nc, q, w), 1, 0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, inp):
+        ac, bc = inp
+        bc = bc.at[:, 0].add(ac[:, 0] * h)
+        _, hh = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hh[:, -1], hh
+
+    _, ys = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    return jnp.moveaxis(ys, 0, 1).reshape(b, nc * q, w)[:, :l]
+
+
+def _conv1d(u, w, b, prev=None):
+    width = w.shape[0]
+    if prev is None:
+        u_pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        u_pad = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(u_pad[:, i:i + u.shape[1], :] * w[i][None, None]
+              for i in range(width))
+    return out + b[None, None]
+
+
+def _gates(params, x):
+    """x: (..., W) fp32 -> (log_a, gated_input) fp32."""
+    r = jax.nn.sigmoid(x @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(x @ params["w_i"].astype(jnp.float32) + params["b_i"])
+    log_a = -C_FACTOR * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * (i * x)
+    return a, gated
+
+
+def rglru_block(params: dict, u: Array, cfg: ModelConfig, *,
+                state: Optional[RGLRUState] = None,
+                update_state: bool = False):
+    """u: (B, L, d_model) -> (out, new_state)."""
+    dt_c = cfg.compute_dtype
+    b, l, d = u.shape
+    w = cfg.rnn_width or d
+
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", u,
+                                  params["in_gate"].astype(dt_c)))
+    x = jnp.einsum("bld,dw->blw", u, params["in_x"].astype(dt_c))
+    x = shard(x, "batch", None, "tp")
+
+    if state is not None and l == 1:
+        xc = _conv1d(x, params["conv_w"].astype(dt_c),
+                     params["conv_b"].astype(dt_c), prev=state.conv)
+        new_conv = jnp.concatenate([state.conv.astype(dt_c), x], axis=1)[:, 1:]
+        a, gated = _gates(params, xc[:, 0].astype(jnp.float32))
+        h = a * state.h + gated                       # (B, W)
+        y = h[:, None].astype(dt_c)
+        new_state = RGLRUState(h=h, conv=new_conv, length=state.length + 1)
+    else:
+        xc = _conv1d(x, params["conv_w"].astype(dt_c),
+                     params["conv_b"].astype(dt_c))
+        a, gated = _gates(params, xc.astype(jnp.float32))   # (B, L, W)
+        # keep the fp32 recurrence W-sharded over tp: without constraints
+        # propagation replicates it (measured ~30 x 640 MiB fp32 buffers
+        # of (B, L, W) on the recurrentgemma train cell)
+        a = shard(a, "batch", None, "tp")
+        gated = shard(gated, "batch", None, "tp")
+
+        h0 = state.h if state is not None else jnp.zeros((b, w), jnp.float32)
+        hh = _chunked_linear_scan(a, gated, h0, chunk=256)
+        hh = shard(hh, "batch", None, "tp")
+        y = hh.astype(dt_c)                           # (B, L, W)
+        new_state = None
+        if update_state:
+            width = params["conv_w"].shape[0]
+            conv_tail = x[:, -(width - 1):] if l >= width - 1 else \
+                jnp.pad(x, ((0, 0), (width - 1 - l, 0), (0, 0)))
+            new_state = RGLRUState(h=hh[:, -1].astype(jnp.float32),
+                                   conv=conv_tail,
+                                   length=(state.length if state else 0) + l)
+
+    y = y * gate
+    out = jnp.einsum("blw,wd->bld", y, params["out"].astype(dt_c))
+    return shard(out, "batch", "sp", None), new_state

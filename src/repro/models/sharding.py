@@ -1,0 +1,137 @@
+"""Logical-axis sharding: one place that maps names -> mesh axes.
+
+Layers annotate activations with ``shard(x, "batch", "seq", None)`` using
+*logical* names; the active ``AxisRules`` (installed by the trainer /
+dry-run via ``use_rules``) resolves them to mesh axes. With no rules
+installed every annotation is the identity, so single-device smoke tests
+and the production 512-chip mesh run the same model code.
+
+Default production mapping (see DESIGN.md §5):
+    batch    -> ("pod", "data")     data parallel across pods
+    fsdp     -> "data"              param & optimizer-state sharding
+    tp       -> "model"             tensor parallel (flat head/ff/vocab dims)
+    sp       -> "model"             sequence parallel (residual stream)
+    kv_seq   -> "model"             decode-time KV-cache sequence sharding
+    long_seq -> ("data", "model")   524k-token cache sharding
+    experts  -> "model"             expert parallel
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Sequence[str], None]
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    mesh: Mesh
+    rules: dict
+
+    def resolve(self, *logical: Axis) -> P:
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+                continue
+            if isinstance(name, str):
+                out.append(self.rules.get(name, None))
+                continue
+            # tuple of logical names -> concatenated mesh axes
+            axes = []
+            for n in name:
+                m = self.rules.get(n, n) if isinstance(n, str) else n
+                if m is None:
+                    continue
+                axes.extend((m,) if isinstance(m, str) else list(m))
+            out.append(tuple(axes) if len(axes) > 1 else
+                       (axes[0] if axes else None))
+        return P(*out)
+
+    def spec_ok(self, spec: P, shape) -> bool:
+        """True iff every sharded dim divides by its mesh-axes product."""
+        for dim, ax in zip(shape, spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape[a]
+            if dim % size != 0:
+                return False
+        return True
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "tp": "model",
+    "sp": "model",
+    "kv_seq": "model",
+    "long_seq": ("data", "model"),
+    "experts": "model",
+    "vocab": "model",
+}
+
+
+def make_rules(mesh: Mesh, overrides: Optional[dict] = None) -> AxisRules:
+    rules = dict(DEFAULT_RULES)
+    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    def filt(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    rules = {k: filt(v) for k, v in rules.items()}
+    if overrides:
+        rules.update({k: filt(v) for k, v in overrides.items()})
+    return AxisRules(mesh=mesh, rules=rules)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def shard(x: jax.Array, *logical: Axis) -> jax.Array:
+    """Constrain ``x`` to the resolved spec; no-op without rules or when a
+    dim doesn't divide (falls back to replicated on that dim)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.resolve(*logical)
+    # degrade per-dimension instead of failing on non-divisible dims
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = 1
+        for a in axes:
+            size *= rules.mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*fixed)))
+
+
+def named_sharding(rules: AxisRules, *logical: Axis) -> NamedSharding:
+    return NamedSharding(rules.mesh, rules.resolve(*logical))

@@ -1,0 +1,210 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train path + O(1) decode.
+
+Train path = the SSD algorithm (Dao & Gu 2024): sequence split into chunks
+of Q tokens; within-chunk term is a masked-decay quadratic form (MXU
+matmuls), across chunks a length/Q sequential scan carries the (h, p, n)
+state. Total cost O(L*Q) intra + O(L/Q) scan instead of O(L^2) attention —
+this is why mamba2-780m runs the 524k-token `long_500k` cell.
+
+Decode: h_new = exp(dt*A) h + dt * B x ; y = C.h + D x with a rolling
+conv-state of width d_conv-1. State is (B, H, P, N) — constant in sequence
+length.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import trunc_normal
+from repro.models.sharding import shard
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array    # (B, d_conv-1, d_in + 2*n) rolling conv input
+    h: Array       # (B, H, P, N) ssm state
+    length: Array  # () int32
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    return d_in, nheads, s.head_dim, s.d_state
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, h, p, n = _dims(cfg)
+    dt = cfg.master_dtype
+    ks = jax.random.split(key, 6)
+    conv_ch = d_in + 2 * n
+    return {
+        # order: [z (gate), x, B, C, dt]
+        "in_proj": trunc_normal(ks[0], (d, 2 * d_in + 2 * n + h),
+                                d ** -0.5, dt),
+        "conv_w": trunc_normal(ks[1], (s.d_conv, conv_ch), 0.3, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (h,), minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), dt),
+        "out_proj": trunc_normal(ks[3], (d_in, d), d_in ** -0.5, dt),
+    }
+
+
+def _causal_conv(u: Array, w: Array, b: Array,
+                 prev: Optional[Array] = None) -> Array:
+    """Depthwise causal conv. u: (B, L, C); w: (W, C). prev: (B, W-1, C)."""
+    width = w.shape[0]
+    if prev is None:
+        u_pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        u_pad = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(u_pad[:, i:i + u.shape[1], :] * w[i][None, None]
+              for i in range(width))
+    return out + b[None, None]
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    d_in, h, p, n = _dims(cfg)
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    bmat = zxbcdt[..., 2 * d_in:2 * d_in + n]
+    cmat = zxbcdt[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, x, bmat, cmat, dt_raw
+
+
+def ssm_block(params: dict, u: Array, cfg: ModelConfig, *,
+              state: Optional[SSMState] = None,
+              update_state: bool = False):
+    """u: (B, L, d_model) -> (out, new_state)."""
+    d_in, h, p, n = _dims(cfg)
+    dt_c = cfg.compute_dtype
+    b, l, _ = u.shape
+
+    zxbcdt = jnp.einsum("bld,de->ble", u, params["in_proj"].astype(dt_c))
+    z, xbc_dt = zxbcdt[..., :d_in], zxbcdt[..., d_in:]
+    xbc = xbc_dt[..., :d_in + 2 * n]
+    dt_raw = xbc_dt[..., d_in + 2 * n:]
+
+    new_conv = None
+    if state is not None and l == 1:
+        conv_in = jnp.concatenate([state.conv.astype(dt_c), xbc], axis=1)
+        xbc_c = _causal_conv(xbc, params["conv_w"].astype(dt_c),
+                             params["conv_b"].astype(dt_c), prev=state.conv)
+        new_conv = conv_in[:, 1:]
+    else:
+        xbc_c = _causal_conv(xbc, params["conv_w"].astype(dt_c),
+                             params["conv_b"].astype(dt_c))
+        width = params["conv_w"].shape[0]
+        new_conv = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0))
+                           )[:, l:l + width - 1] if l >= width - 1 else None
+        if update_state and new_conv is None:
+            new_conv = jnp.zeros((b, width - 1, d_in + 2 * n), dt_c)
+    xbc_c = jax.nn.silu(xbc_c)
+    x = xbc_c[..., :d_in].reshape(b, l, h, p)
+    bmat = xbc_c[..., d_in:d_in + n]
+    cmat = xbc_c[..., d_in + n:]
+
+    a = -jnp.exp(params["a_log"])                          # (H,) negative
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None])  # (B, L, H)
+
+    x = shard(x, "batch", None, "tp", None)
+    if state is not None and l == 1:
+        # ---- O(1) recurrent step ---------------------------------------
+        da = jnp.exp(dt[:, 0] * a[None])                   # (B, H)
+        xb = jnp.einsum("bhp,bn->bhpn", (dt[:, 0, :, None] *
+                                         x[:, 0].astype(jnp.float32)),
+                        bmat[:, 0].astype(jnp.float32))
+        h_new = state.h * da[..., None, None] + xb
+        y = jnp.einsum("bhpn,bn->bhp", h_new, cmat[:, 0].astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * x[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(dt_c).reshape(b, 1, d_in)
+        new_state = SSMState(conv=new_conv.astype(dt_c), h=h_new,
+                             length=state.length + 1)
+    else:
+        y, h_last = _ssd_chunked(x, dt, a, bmat, cmat, cfg)
+        y = y + (params["d_skip"][None, None, :, None] *
+                 x.astype(jnp.float32))
+        y = y.reshape(b, l, d_in).astype(dt_c)
+        new_state = None
+        if update_state:
+            width = params["conv_w"].shape[0]
+            conv_tail = xbc[:, -(width - 1):] if l >= width - 1 else \
+                jnp.pad(xbc, ((0, 0), (width - 1 - l, 0), (0, 0)))
+            new_state = SSMState(conv=conv_tail.astype(dt_c), h=h_last,
+                                 length=(state.length if state else 0) + l)
+
+    # gated RMSNorm then out-projection
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps)
+    yf = yf * (1.0 + params["norm_scale"].astype(jnp.float32))
+    y = (yf * jax.nn.silu(z.astype(jnp.float32))).astype(dt_c)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"].astype(dt_c))
+    return shard(out, "batch", "sp", None), new_state
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, cfg: ModelConfig):
+    """SSD algorithm. x: (B, L, H, P) fp-any; dt: (B, L, H) fp32;
+    a: (H,); bmat/cmat: (B, L, N). Returns (y (B,L,H,P) fp32, h_last)."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm.chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    lc = x.shape[1]
+    nc = lc // q
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h)
+    bf = bmat.astype(jnp.float32).reshape(b, nc, q, n)
+    cf = cmat.astype(jnp.float32).reshape(b, nc, q, n)
+
+    da = dtc * a[None, None, None]                   # (B, C, Q, H)
+    cs = jnp.cumsum(da, axis=2)                      # inclusive cumsum
+    xbar = xf * dtc[..., None]                       # (B, C, Q, H, P)
+
+    # within-chunk (diagonal) term
+    cb = jnp.einsum("bcin,bcjn->bcij", cf, bf)       # (B, C, Q, Q)
+    decay = jnp.exp(cs[:, :, :, None] - cs[:, :, None, :])  # (B,C,Qi,Qj,H)
+    ii = jnp.arange(q)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    m = jnp.where(mask, cb[..., None] * decay, 0.0)  # (B, C, Qi, Qj, H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", m, xbar)
+
+    # chunk states: S_c = sum_j B_j xbar_j exp(cs_last - cs_j)
+    seg = jnp.exp(cs[:, :, -1:, :] - cs)             # (B, C, Q, H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bf, seg, xbar)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])           # (B, C, H)
+
+    def step(hprev, inp):
+        s_c, dec = inp
+        h_new = hprev * dec[..., None, None] + s_c
+        return h_new, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_last, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)            # (B, C, H, P, N)
+
+    # off-diagonal: y_off_i = C_i . H_prev * exp(cs_i)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", cf, jnp.exp(cs), h_prevs)
+
+    y = (y_diag + y_off).reshape(b, lc, h, p)[:, :l]
+    return y, h_last

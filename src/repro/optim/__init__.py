@@ -1,0 +1,24 @@
+from repro.optim.optimizers import (
+    adamw,
+    sgd,
+    clip_by_global_norm,
+    chain,
+    apply_updates,
+    cosine_schedule,
+    linear_warmup_cosine,
+    constant_schedule,
+)
+from repro.optim.compression import int8_compress_decompress, error_feedback_compress
+
+__all__ = [
+    "adamw",
+    "sgd",
+    "clip_by_global_norm",
+    "chain",
+    "apply_updates",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+    "constant_schedule",
+    "int8_compress_decompress",
+    "error_feedback_compress",
+]

@@ -1,0 +1,65 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 quantization with per-tensor scale + error feedback (EF-SGD style):
+the quantization residual is carried to the next step so the compressed
+optimizer remains unbiased in the long run. At 1000+ nodes the DP gradient
+all-reduce over DCN is the scaling bottleneck; 4x byte reduction on that
+axis is the standard mitigation.
+
+The trainer applies ``error_feedback_compress`` to gradients *before* the
+pmean over the ``pod`` axis (cross-pod DCN hop) and keeps the residual in
+the training state so it checkpoints/reshard like everything else.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_decompress(x: jax.Array) -> jax.Array:
+    """Round-trip a tensor through int8 (simulates the wire format)."""
+    q, s = _quantize_int8(x)
+    return _dequantize_int8(q, s)
+
+
+def error_feedback_compress(grads: PyTree, residual: PyTree):
+    """Compress ``grads + residual`` to int8; return (compressed, new_residual).
+
+    The returned ``compressed`` tree is what goes over the wire (here:
+    dequantized values so downstream math is unchanged — on a real wire the
+    int8 payload + scale is 1/4 the bytes).  ``new_residual`` must be carried
+    in the train state.
+    """
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, s = _quantize_int8(g32)
+        deq = _dequantize_int8(q, s)
+        return deq.astype(g.dtype), (g32 - deq)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = tdef.unflatten([o[0] for o in out])
+    new_res = tdef.unflatten([o[1] for o in out])
+    return comp, new_res
+
+
+def init_residual(grads_like: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import (
+    StepWatchdog, RetryingTrainer, TrainingAborted,
+)
+
+__all__ = ["StepWatchdog", "RetryingTrainer", "TrainingAborted"]

@@ -1,0 +1,119 @@
+"""Fault tolerance: step watchdog (straggler mitigation) + retrying driver.
+
+At 1000+ nodes, failures are routine: a training job must (a) notice a
+stuck/slow step, (b) abort cleanly, (c) restart from the last committed
+checkpoint, possibly on FEWER nodes (elastic). The pieces here:
+
+  * ``StepWatchdog`` — monitors per-step wall time on a background thread.
+    A step exceeding ``timeout_factor`` x the trailing-median is flagged as
+    a straggler event; ``max_strays`` consecutive events trigger an abort
+    (in production: the signal that makes the scheduler replace the slow
+    host; here: raises in the driver loop).
+  * ``RetryingTrainer`` — wraps the step loop: on any exception it
+    restores the latest committed checkpoint (via the elastic
+    Checkpointer, so a changed mesh is fine), rebuilds the jitted step,
+    and resumes; gives up after ``max_restarts``.
+
+The data loader's state is part of the checkpoint ``extra`` payload, so a
+restart replays no batch and skips none (deterministic loaders,
+repro.data.loader).
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+class TrainingAborted(RuntimeError):
+    pass
+
+
+class StepWatchdog:
+    """Detects stuck/straggling steps by wall-time statistics."""
+
+    def __init__(self, *, timeout_factor: float = 5.0,
+                 min_history: int = 5, max_strays: int = 3,
+                 hard_timeout_s: float = 0.0,
+                 on_straggler: Optional[Callable[[float, float], None]] = None):
+        self.timeout_factor = timeout_factor
+        self.min_history = min_history
+        self.max_strays = max_strays
+        self.hard_timeout_s = hard_timeout_s
+        self.on_straggler = on_straggler
+        self.history: list[float] = []
+        self.stray_count = 0
+        self.events: list[dict] = []
+        self._t0: Optional[float] = None
+
+    def start_step(self):
+        self._t0 = time.monotonic()
+
+    def end_step(self):
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        median = (statistics.median(self.history)
+                  if len(self.history) >= self.min_history else None)
+        is_stray = False
+        if median is not None and dt > self.timeout_factor * median:
+            is_stray = True
+        if self.hard_timeout_s and dt > self.hard_timeout_s:
+            is_stray = True
+        if is_stray:
+            self.stray_count += 1
+            self.events.append({"t": time.time(), "step_s": dt,
+                                "median_s": median})
+            if self.on_straggler:
+                self.on_straggler(dt, median or 0.0)
+            if self.stray_count >= self.max_strays:
+                raise TrainingAborted(
+                    f"{self.stray_count} consecutive straggler steps "
+                    f"(last {dt:.2f}s vs median {median:.2f}s)")
+        else:
+            self.stray_count = 0
+            self.history.append(dt)
+            if len(self.history) > 100:
+                self.history.pop(0)
+        return dt
+
+
+class RetryingTrainer:
+    """Restart-from-checkpoint driver loop.
+
+    build_fn() -> (state, loader, step_fn): must restore from the latest
+    checkpoint internally (see examples/train_lm.py / launch/train.py).
+    """
+
+    def __init__(self, build_fn, *, max_restarts: int = 3):
+        self.build_fn = build_fn
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, n_steps: int, *, hooks=()):
+        while True:
+            try:
+                state, loader, step_fn, start_step = self.build_fn()
+                watchdog = StepWatchdog()
+                step = start_step
+                while step < n_steps:
+                    batch = next(loader)
+                    watchdog.start_step()
+                    state, metrics = step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    watchdog.end_step()
+                    step += 1
+                    for h in hooks:
+                        h(step, state, metrics, loader)
+                return state
+            except TrainingAborted:
+                raise
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                # fall through: rebuild from latest checkpoint
+                continue

@@ -1,0 +1,10 @@
+from repro.training.trainer import (
+    TrainState, make_train_step, make_serve_steps, init_train_state,
+    param_pspecs, cache_pspecs, input_specs, state_pspecs, TrainHparams,
+)
+
+__all__ = [
+    "TrainState", "make_train_step", "make_serve_steps", "init_train_state",
+    "param_pspecs", "cache_pspecs", "input_specs", "state_pspecs",
+    "TrainHparams",
+]

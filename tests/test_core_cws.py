@@ -1,0 +1,199 @@
+"""Unit + property tests for the paper's core: CWS and kernels.
+
+The central statistical claims validated here:
+  * full-scheme collision rate -> K_MM      (Eq. 7, the CWS theorem)
+  * 0-bit collision rate      ~= K_MM       (Eq. 8, the paper's proposal)
+  * MSE of both ~ K(1-K)/k                  (binomial variance, Figs 4-5)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    cws_hash, cws_hash_reference, make_cws_params, minmax_gram, minmax_pair,
+    nminmax_gram, intersection_gram, linear_gram, resemblance_gram,
+    encode, collision_estimate, full_collision_estimate, feature_indices,
+    one_hot_features,
+)
+from repro.core.kernels import sum_to_one, unit_l2
+
+
+def rand_nonneg(key, shape, sparsity=0.5):
+    k1, k2 = jax.random.split(key)
+    mag = jnp.exp(jax.random.normal(k1, shape))
+    mask = jax.random.bernoulli(k2, 1 - sparsity, shape)
+    return mag * mask
+
+
+# ---------------------------------------------------------------------------
+# Gram kernels
+# ---------------------------------------------------------------------------
+
+class TestGrams:
+    def test_minmax_gram_matches_pair(self):
+        key = jax.random.PRNGKey(0)
+        x = rand_nonneg(key, (7, 33))
+        g = minmax_gram(x, x)
+        for i in range(7):
+            for j in range(7):
+                np.testing.assert_allclose(
+                    g[i, j], minmax_pair(x[i], x[j]), rtol=1e-5)
+
+    def test_minmax_diag_is_one(self):
+        x = rand_nonneg(jax.random.PRNGKey(1), (9, 50), sparsity=0.3)
+        g = minmax_gram(x, x)
+        np.testing.assert_allclose(np.diag(np.asarray(g)), 1.0, atol=1e-5)
+
+    def test_minmax_range_and_symmetry(self):
+        x = rand_nonneg(jax.random.PRNGKey(2), (16, 40))
+        g = np.asarray(minmax_gram(x, x))
+        assert (g >= -1e-6).all() and (g <= 1 + 1e-6).all()
+        np.testing.assert_allclose(g, g.T, atol=1e-6)
+
+    def test_chunking_invariance(self):
+        x = rand_nonneg(jax.random.PRNGKey(3), (19, 23))
+        y = rand_nonneg(jax.random.PRNGKey(4), (11, 23))
+        np.testing.assert_allclose(minmax_gram(x, y, block=4),
+                                   minmax_gram(x, y, block=64), rtol=1e-6)
+
+    def test_resemblance_on_binary_equals_minmax(self):
+        x = (rand_nonneg(jax.random.PRNGKey(5), (8, 30)) > 0).astype(jnp.float32)
+        np.testing.assert_allclose(resemblance_gram(x, x), minmax_gram(x, x),
+                                   rtol=1e-6)
+
+    def test_normalizers(self):
+        x = rand_nonneg(jax.random.PRNGKey(6), (5, 12)) + 0.01
+        np.testing.assert_allclose(np.asarray(sum_to_one(x)).sum(-1), 1.0,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(unit_l2(x)), axis=-1), 1.0, rtol=1e-5)
+
+    def test_intersection_le_one(self):
+        x = rand_nonneg(jax.random.PRNGKey(7), (6, 25)) + 0.01
+        g = np.asarray(intersection_gram(x, x))
+        assert (g <= 1 + 1e-5).all() and (g >= 0).all()
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_minmax_psd_property(self, seed):
+        """Min-max kernel is PD (expectation of inner product) — the Gram
+        of any nonneg sample must be PSD up to numerics."""
+        x = rand_nonneg(jax.random.PRNGKey(seed % 2**31), (10, 17))
+        g = np.asarray(minmax_gram(x, x), np.float64)
+        w = np.linalg.eigvalsh((g + g.T) / 2)
+        assert w.min() > -1e-5
+
+
+# ---------------------------------------------------------------------------
+# CWS
+# ---------------------------------------------------------------------------
+
+class TestCWS:
+    def test_chunked_matches_reference(self):
+        key = jax.random.PRNGKey(0)
+        x = rand_nonneg(key, (13, 29))
+        params = make_cws_params(jax.random.PRNGKey(1), 29, 37)
+        i_ref, t_ref = cws_hash_reference(x, params)
+        i_c, t_c = cws_hash(x, params, row_block=4, hash_block=8)
+        np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_c))
+        np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_c))
+
+    def test_scale_invariance_of_istar_distribution(self):
+        """CWS is 'consistent': scaling u by s shifts t* but i* statistics
+        w.r.t. a second vector only depend on min-max, which IS scale
+        sensitive — but u vs 2u has K_MM = 0.5. Sanity: identical vectors
+        collide with prob 1."""
+        x = rand_nonneg(jax.random.PRNGKey(2), (1, 64)) + 0.01
+        params = make_cws_params(jax.random.PRNGKey(3), 64, 256)
+        i1, t1 = cws_hash_reference(x, params)
+        i2, t2 = cws_hash_reference(x, params)
+        assert float(full_collision_estimate(i1, t1, i2, t2)[0]) == 1.0
+
+    def test_full_collision_estimates_minmax(self):
+        key = jax.random.PRNGKey(4)
+        u = rand_nonneg(key, (1, 48), sparsity=0.4) + 0.0
+        v = u * jnp.exp(0.3 * jax.random.normal(jax.random.PRNGKey(5), (1, 48)))
+        v = v * jax.random.bernoulli(jax.random.PRNGKey(6), 0.8, (1, 48))
+        k_true = float(minmax_pair(u[0], v[0]))
+        params = make_cws_params(jax.random.PRNGKey(7), 48, 4096)
+        iu, tu = cws_hash_reference(u, params)
+        iv, tv = cws_hash_reference(v, params)
+        est_full = float(full_collision_estimate(iu, tu, iv, tv)[0])
+        est_0bit = float(collision_estimate(iu, iv)[0])
+        se = np.sqrt(k_true * (1 - k_true) / 4096)
+        assert abs(est_full - k_true) < 5 * se, (est_full, k_true, se)
+        # the paper's claim: 0-bit barely differs from full
+        assert abs(est_0bit - k_true) < 5 * se + 5e-3, (est_0bit, k_true)
+
+    def test_zero_vector_sentinel(self):
+        x = jnp.zeros((2, 10))
+        params = make_cws_params(jax.random.PRNGKey(0), 10, 5)
+        i_s, t_s = cws_hash_reference(x, params)
+        assert (np.asarray(i_s) == -1).all()
+
+    def test_istar_in_range(self):
+        x = rand_nonneg(jax.random.PRNGKey(8), (6, 21))
+        params = make_cws_params(jax.random.PRNGKey(9), 21, 11)
+        i_s, _ = cws_hash_reference(x, params)
+        i_np = np.asarray(i_s)
+        active = i_np >= 0
+        assert (i_np[active] < 21).all()
+
+    @given(st.integers(0, 10 ** 6), st.integers(2, 40), st.integers(1, 24))
+    @settings(max_examples=12, deadline=None)
+    def test_property_collision_only_if_shared_support(self, seed, d, k):
+        """If supports are disjoint, i* can still coincide by index but the
+        pair (i*, t*) collision estimate must be ~0 <= small, and K_MM = 0."""
+        key = jax.random.PRNGKey(seed)
+        half = d // 2
+        u = jnp.concatenate([rand_nonneg(key, (1, half), 0.0) + 0.1,
+                             jnp.zeros((1, d - half))], axis=1)
+        v = jnp.concatenate([jnp.zeros((1, half)),
+                             rand_nonneg(jax.random.fold_in(key, 1),
+                                         (1, d - half), 0.0) + 0.1], axis=1)
+        assert float(minmax_pair(u[0], v[0])) == 0.0
+        params = make_cws_params(jax.random.fold_in(key, 2), d, k)
+        iu, tu = cws_hash_reference(u, params)
+        iv, tv = cws_hash_reference(v, params)
+        # disjoint support => i* indices differ (they index different halves)
+        assert float(full_collision_estimate(iu, tu, iv, tv)[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# encodings
+# ---------------------------------------------------------------------------
+
+class TestEncoding:
+    def test_bbit_masks(self):
+        i_s = jnp.array([[5, 255, 256, -1]], jnp.int32)
+        t_s = jnp.array([[3, -5, 7, 0]], jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(encode(i_s, t_s, b_i=8))[0], [5, 255, 0, -1])
+        c2 = np.asarray(encode(i_s, t_s, b_i=4, b_t=1))[0]
+        assert c2[0] == 5 * 2 + 1
+        assert c2[3] == -1
+
+    def test_feature_indices_disjoint_per_hash(self):
+        codes = jnp.array([[0, 1, 3]], jnp.int32)
+        idx = np.asarray(feature_indices(codes, b_i=2))
+        assert (idx == np.array([[0, 5, 11]])).all()
+
+    def test_one_hot_row_sum_is_k(self):
+        codes = jnp.array([[1, 2, 0, 3], [3, 3, 3, 3]], jnp.int32)
+        oh = np.asarray(one_hot_features(codes, b_i=2))
+        assert oh.shape == (2, 16)
+        np.testing.assert_array_equal(oh.sum(-1), [4, 4])
+
+    def test_inner_product_counts_collisions(self):
+        """<phi(u), phi(v)> / k == 0-bit collision estimate (the linearization)."""
+        key = jax.random.PRNGKey(11)
+        x = rand_nonneg(key, (2, 32), 0.3) + 0.01
+        params = make_cws_params(jax.random.PRNGKey(12), 32, 64)
+        i_s, t_s = cws_hash_reference(x, params)
+        codes = encode(i_s, t_s, b_i=8)
+        oh = one_hot_features(codes, b_i=8)
+        ip = float(oh[0] @ oh[1]) / 64.0
+        est = float(collision_estimate(codes[0], codes[1]))
+        assert abs(ip - est) < 1e-6

@@ -1,0 +1,75 @@
+"""The loop-aware HLO analyzer must recover trip counts and scale FLOPs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze, parse_hlo
+
+
+def _compile(fn, *sds):
+    return jax.jit(fn).lower(*sds).compile().as_text()
+
+
+class TestHLOAnalysis:
+    def test_scan_trip_count_scales_flops(self):
+        n, reps = 128, 48
+
+        def f(x):
+            def body(c, _):
+                return c @ c * 0.5, None
+            y, _ = jax.lax.scan(body, x, None, length=reps)
+            return y
+
+        txt = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+        stats = analyze(txt, 1)
+        expected = 2.0 * n * n * n * reps
+        assert 0.9 * expected <= stats.dot_flops <= 1.2 * expected, \
+            (stats.dot_flops, expected, stats.loop_trips)
+        assert reps in stats.loop_trips
+
+    def test_nested_scan_multiplies(self):
+        n, outer, inner = 64, 5, 7
+
+        def f(x):
+            def in_body(c, _):
+                return c @ c * 0.9, None
+
+            def out_body(c, _):
+                y, _ = jax.lax.scan(in_body, c, None, length=inner)
+                return y, None
+
+            y, _ = jax.lax.scan(out_body, x, None, length=outer)
+            return y
+
+        txt = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+        stats = analyze(txt, 1)
+        expected = 2.0 * n ** 3 * outer * inner
+        assert 0.9 * expected <= stats.dot_flops <= 1.3 * expected
+
+    def test_flops_without_loops(self):
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        txt = _compile(lambda x, y: x @ y, a, b)
+        stats = analyze(txt, 1)
+        expected = 2.0 * 64 * 128 * 32
+        assert 0.9 * expected <= stats.dot_flops <= 1.1 * expected
+
+    def test_bytes_nonzero_and_sane(self):
+        a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        txt = _compile(lambda x: (x @ x).sum(), a)
+        stats = analyze(txt, 1)
+        lo = 2 * 256 * 256 * 4          # at least read A twice-ish
+        hi = 50 * 256 * 256 * 4
+        assert lo <= stats.bytes_accessed <= hi, stats.bytes_accessed
+
+    def test_parse_computations(self):
+        a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+        def f(x):
+            y, _ = jax.lax.scan(lambda c, _: (c * 2.0, None), x, None,
+                                length=11)
+            return y
+
+        comps = parse_hlo(_compile(f, a))
+        assert len(comps) >= 2
+        assert any(c.trip_const == 11 for c in comps.values())

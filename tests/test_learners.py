@@ -1,0 +1,100 @@
+"""Learner correctness: dual-CD kernel SVM and the embedding-bag linear
+model, plus the CWS classifier head."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernel_svm import (fit_kernel_svm, predict, accuracy,
+                                   decision_values)
+from repro.core.kernels import linear_gram, minmax_gram
+from repro.core.linear_model import (TrainCfg, fit_linear, init_dense,
+                                     init_hashed, linear_accuracy,
+                                     dense_logits)
+from repro.models.cws_head import (init_cws_head, cws_head_logits,
+                                   pool_hidden)
+
+
+def separable_data(key, n=200, d=8, margin=1.5):
+    w = jax.random.normal(key, (d,))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    y = (x @ w > 0).astype(jnp.int32)
+    x = x + margin * jnp.where(y[:, None] > 0, w, -w) / jnp.linalg.norm(w)
+    return jnp.abs(x) * 0 + x, y  # may be negative; linear kernel only
+
+
+class TestKernelSVM:
+    def test_separable_binary(self):
+        x, y = separable_data(jax.random.PRNGKey(0))
+        K = x @ x.T
+        m = fit_kernel_svm(K, y, C=10.0, sweeps=50, n_classes=2)
+        assert float(accuracy(m, K, y)) > 0.99
+
+    def test_multiclass_onehot_clusters(self):
+        key = jax.random.PRNGKey(1)
+        centers = 4.0 * jnp.eye(4)[:, :3]  # hmm 4 classes in 3 dims
+        labels = jax.random.randint(key, (160,), 0, 4)
+        x = centers[labels] + 0.2 * jax.random.normal(
+            jax.random.fold_in(key, 1), (160, 3))
+        x = jnp.abs(x)
+        K = minmax_gram(x, x)
+        m = fit_kernel_svm(K, labels, C=10.0, sweeps=40, n_classes=4)
+        assert float(accuracy(m, K, labels)) > 0.97
+
+    def test_dual_feasibility(self):
+        x, y = separable_data(jax.random.PRNGKey(2), n=60)
+        K = x @ x.T
+        m = fit_kernel_svm(K, y, C=1.0, sweeps=50, n_classes=2)
+        assert (np.asarray(m.alpha) >= -1e-6).all()   # alpha >= 0
+
+    def test_decision_values_shape(self):
+        x, y = separable_data(jax.random.PRNGKey(3), n=50)
+        K = x @ x.T
+        m = fit_kernel_svm(K, y, C=1.0, sweeps=10, n_classes=2)
+        f = decision_values(m, K[:7])
+        assert f.shape == (7,)
+
+
+class TestLinearModel:
+    def test_dense_learns_linear_labels(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (64, 16))
+        w_true = jax.random.normal(jax.random.fold_in(key, 1), (16, 3))
+        y = jnp.argmax(x @ w_true, axis=-1)   # linearly separable-ish
+        cfg = TrainCfg(n_classes=3, steps=500, lr=0.1, l2=0.0)
+        p = fit_linear(init_dense(key, 16, 3), x, y, cfg=cfg, kind="dense")
+        assert linear_accuracy(p, x, y, kind="dense") > 0.9
+
+    def test_hashed_overfits_small(self):
+        key = jax.random.PRNGKey(1)
+        codes = jax.random.randint(key, (64, 32), 0, 16)
+        y = jax.random.randint(jax.random.fold_in(key, 1), (64,), 0, 2)
+        cfg = TrainCfg(n_classes=2, steps=500, lr=0.1, l2=0.0)
+        p = fit_linear(init_hashed(key, 32, 16, 2), codes, y, cfg=cfg,
+                       kind="hashed")
+        assert linear_accuracy(p, codes, y, kind="hashed") > 0.95
+
+
+class TestCWSHead:
+    def test_shapes_and_determinism(self):
+        key = jax.random.PRNGKey(0)
+        head = init_cws_head(key, 32, k=16, b_i=4, n_classes=5)
+        feats = jax.random.normal(jax.random.fold_in(key, 1), (6, 32))
+        l1 = cws_head_logits(head, feats, b_i=4)
+        l2 = cws_head_logits(head, feats, b_i=4)
+        assert l1.shape == (6, 5)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+    def test_pallas_path_matches_jax_path(self):
+        key = jax.random.PRNGKey(2)
+        head = init_cws_head(key, 24, k=8, b_i=4, n_classes=3)
+        head = head._replace(table=jax.random.normal(
+            jax.random.fold_in(key, 3), head.table.shape))
+        feats = jax.random.normal(jax.random.fold_in(key, 1), (5, 24))
+        l_jax = cws_head_logits(head, feats, b_i=4, use_pallas=False)
+        l_pl = cws_head_logits(head, feats, b_i=4, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(l_jax), np.asarray(l_pl),
+                                   rtol=1e-6)
+
+    def test_pool(self):
+        h = jnp.ones((2, 10, 4))
+        assert pool_hidden(h).shape == (2, 4)

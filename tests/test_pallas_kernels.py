@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cws import make_cws_params, cws_hash as cws_hash_core
+from repro.kernels import ops
+from repro.kernels.ref import cws_hash_ref, minmax_gram_ref, min_sum_ref
+
+
+def rand_nonneg(key, shape, sparsity=0.4, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    mag = jnp.exp(jax.random.normal(k1, shape))
+    mask = jax.random.bernoulli(k2, 1 - sparsity, shape)
+    return (mag * mask).astype(dtype)
+
+
+CWS_SHAPES = [
+    # (n, D, k, bn, bk, bd)
+    (4, 8, 4, 4, 4, 8),
+    (16, 32, 16, 8, 8, 16),
+    (33, 50, 21, 8, 8, 16),     # non-divisible everywhere
+    (7, 128, 64, 8, 32, 32),
+    (64, 300, 33, 32, 16, 128),
+    (128, 64, 128, 128, 128, 64),
+]
+
+
+class TestCWSPallas:
+    @pytest.mark.parametrize("n,d,k,bn,bk,bd", CWS_SHAPES)
+    def test_matches_oracle(self, n, d, k, bn, bk, bd):
+        x = rand_nonneg(jax.random.PRNGKey(n * 1000 + d), (n, d))
+        p = make_cws_params(jax.random.PRNGKey(d * 7 + k), d, k)
+        i_ref, t_ref = cws_hash_ref(x, p.r, p.log_c, p.beta)
+        i_pl, t_pl = ops.cws_hash(x, p, bn=bn, bk=bk, bd=bd, interpret=True)
+        np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+        np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_pl))
+
+    def test_matches_core_chunked(self):
+        x = rand_nonneg(jax.random.PRNGKey(0), (40, 70))
+        p = make_cws_params(jax.random.PRNGKey(1), 70, 30)
+        i_core, t_core = cws_hash_core(x, p, row_block=16, hash_block=8)
+        i_pl, t_pl = ops.cws_hash(x, p, bn=16, bk=8, bd=32, interpret=True)
+        np.testing.assert_array_equal(np.asarray(i_core), np.asarray(i_pl))
+        np.testing.assert_array_equal(np.asarray(t_core), np.asarray(t_pl))
+
+    def test_zero_rows_sentinel(self):
+        x = jnp.zeros((8, 16))
+        p = make_cws_params(jax.random.PRNGKey(2), 16, 8)
+        i_pl, t_pl = ops.cws_hash(x, p, bn=4, bk=4, bd=8, interpret=True)
+        assert (np.asarray(i_pl) == -1).all()
+        assert (np.asarray(t_pl) == 0).all()
+
+    def test_mixed_sparsity_row(self):
+        # one dense row, one zero row, one single-entry row
+        x = jnp.zeros((3, 12)).at[0].set(1.5).at[2, 5].set(3.0)
+        p = make_cws_params(jax.random.PRNGKey(3), 12, 16)
+        i_ref, t_ref = cws_hash_ref(x, p.r, p.log_c, p.beta)
+        i_pl, t_pl = ops.cws_hash(x, p, bn=2, bk=8, bd=4, interpret=True)
+        np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+        assert (np.asarray(i_pl[2]) == 5).all()   # only one active dim
+
+    @pytest.mark.parametrize("in_dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+    def test_input_dtypes(self, in_dtype):
+        # data may arrive in low precision; hashing math is fp32 internally
+        x = rand_nonneg(jax.random.PRNGKey(4), (12, 24), dtype=in_dtype)
+        p = make_cws_params(jax.random.PRNGKey(5), 24, 8)
+        i_ref, t_ref = cws_hash_ref(x, p.r, p.log_c, p.beta)
+        i_pl, t_pl = ops.cws_hash(x, p, bn=4, bk=4, bd=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_pl))
+
+
+GRAM_SHAPES = [
+    (4, 4, 8, 4, 4, 8),
+    (16, 8, 32, 8, 8, 16),
+    (33, 17, 50, 8, 8, 16),
+    (64, 64, 128, 32, 32, 64),
+    (10, 128, 77, 8, 64, 32),
+]
+
+
+class TestMinMaxGramPallas:
+    @pytest.mark.parametrize("m,n,d,bm,bn,bd", GRAM_SHAPES)
+    def test_matches_oracle(self, m, n, d, bm, bn, bd):
+        x = rand_nonneg(jax.random.PRNGKey(m * 31 + d), (m, d))
+        y = rand_nonneg(jax.random.PRNGKey(n * 17 + d), (n, d))
+        g_ref = minmax_gram_ref(x, y)
+        g_pl = ops.minmax_gram(x, y, bm=bm, bn=bn, bd=bd, interpret=True)
+        np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_pl),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("m,n,d,bm,bn,bd", GRAM_SHAPES[:3])
+    def test_min_sum_matches(self, m, n, d, bm, bn, bd):
+        x = rand_nonneg(jax.random.PRNGKey(1), (m, d))
+        y = rand_nonneg(jax.random.PRNGKey(2), (n, d))
+        np.testing.assert_allclose(np.asarray(min_sum_ref(x, y)),
+                                   np.asarray(ops.min_sum(x, y, bm=bm, bn=bn,
+                                                          bd=bd, interpret=True)),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = rand_nonneg(jax.random.PRNGKey(3), (9, 33), dtype=dtype)
+        y = rand_nonneg(jax.random.PRNGKey(4), (7, 33), dtype=dtype)
+        g_ref = minmax_gram_ref(x, y)  # ref upcasts to fp32 the same way
+        g_pl = ops.minmax_gram(x, y, bm=4, bn=4, bd=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(g_ref), np.asarray(g_pl),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_diag_one_selfgram(self):
+        x = rand_nonneg(jax.random.PRNGKey(5), (20, 40), sparsity=0.2) + 0.01
+        g = np.asarray(ops.minmax_gram(x, x, bm=8, bn=8, bd=16, interpret=True))
+        np.testing.assert_allclose(np.diag(g), 1.0, atol=1e-5)

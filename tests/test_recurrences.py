@@ -1,0 +1,126 @@
+"""Chunked/parallel recurrence implementations vs naive sequential oracles.
+
+The SSD (Mamba2) chunked algorithm and the RG-LRU chunked associative scan
+must match a step-by-step recurrence exactly — these are the invariants
+that make `long_500k` trustworthy.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.config import ModelConfig, SSMCfg
+from repro.models import ssm as ssm_lib
+from repro.models.rglru import _chunked_linear_scan
+
+
+def _ssm_cfg(chunk):
+    return ModelConfig(
+        name="t", n_layers=2, d_model=32, n_heads=0, n_kv_heads=0,
+        head_dim=0, d_ff=0, vocab=64, dtype="float32",
+        block_pattern=("ssm",),
+        ssm=SSMCfg(d_state=8, d_conv=4, expand=2, head_dim=8, chunk=chunk))
+
+
+def naive_ssd(x, dt, a, bmat, cmat):
+    """Sequential SSM recurrence: h_t = exp(dt_t a) h_{t-1} + dt_t B_t x_t;
+    y_t = C_t . h_t   (x: (B,L,H,P), dt: (B,L,H), B/C: (B,L,N))."""
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    hstate = np.zeros((b, h, p, n), np.float64)
+    ys = np.zeros((b, l, h, p), np.float64)
+    xf = np.asarray(x, np.float64)
+    dtf = np.asarray(dt, np.float64)
+    af = np.asarray(a, np.float64)
+    bf = np.asarray(bmat, np.float64)
+    cf = np.asarray(cmat, np.float64)
+    for t in range(l):
+        da = np.exp(dtf[:, t] * af[None])                     # (B, H)
+        xb = np.einsum("bhp,bn->bhpn", dtf[:, t, :, None] * xf[:, t],
+                       bf[:, t])
+        hstate = hstate * da[..., None, None] + xb
+        ys[:, t] = np.einsum("bhpn,bn->bhp", hstate, cf[:, t])
+    return ys, hstate
+
+
+class TestSSD:
+    @pytest.mark.parametrize("l,chunk", [(16, 4), (33, 8), (64, 16),
+                                         (20, 32)])
+    def test_chunked_matches_sequential(self, l, chunk):
+        cfg = _ssm_cfg(chunk)
+        key = jax.random.PRNGKey(l * 7 + chunk)
+        b, h, p, n = 2, 8, 8, 8
+        x = jax.random.normal(key, (b, l, h, p))
+        dt = jax.nn.softplus(jax.random.normal(
+            jax.random.fold_in(key, 1), (b, l, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+        bmat = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n))
+        cmat = jax.random.normal(jax.random.fold_in(key, 4), (b, l, n))
+        y, h_last = ssm_lib._ssd_chunked(x, dt, a, bmat, cmat, cfg)
+        y_ref, h_ref = naive_ssd(x, dt, a, bmat, cmat)
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4,
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(h_last), h_ref, rtol=2e-4,
+                                   atol=2e-4)
+
+    def test_decode_state_matches_train_tail(self):
+        """One-token recurrent decode from the train-produced state must
+        continue the sequence exactly (covered end-to-end in arch smoke;
+        here at the raw-SSD level)."""
+        cfg = _ssm_cfg(8)
+        key = jax.random.PRNGKey(0)
+        b, l, h, p, n = 1, 24, 8, 8, 8
+        x = jax.random.normal(key, (b, l + 1, h, p))
+        dt = jax.nn.softplus(jax.random.normal(
+            jax.random.fold_in(key, 1), (b, l + 1, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+        bm = jax.random.normal(jax.random.fold_in(key, 3), (b, l + 1, n))
+        cm = jax.random.normal(jax.random.fold_in(key, 4), (b, l + 1, n))
+        _, h_prefix = ssm_lib._ssd_chunked(x[:, :l], dt[:, :l], a,
+                                           bm[:, :l], cm[:, :l], cfg)
+        # manual one-step update
+        da = jnp.exp(dt[:, l] * a[None])
+        xb = jnp.einsum("bhp,bn->bhpn", dt[:, l, :, None] * x[:, l], bm[:, l])
+        h_step = h_prefix * da[..., None, None] + xb
+        y_step = jnp.einsum("bhpn,bn->bhp", h_step, cm[:, l])
+        y_full, _ = ssm_lib._ssd_chunked(x, dt, a, bm, cm, cfg)
+        np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full[:, l]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRGLRUScan:
+    def naive(self, a, bb, h0):
+        a_, b_ = np.asarray(a, np.float64), np.asarray(bb, np.float64)
+        h = np.asarray(h0, np.float64)
+        out = np.zeros_like(b_)
+        for t in range(a_.shape[1]):
+            h = a_[:, t] * h + b_[:, t]
+            out[:, t] = h
+        return out
+
+    @pytest.mark.parametrize("l,chunk", [(8, 4), (30, 8), (64, 256),
+                                         (257, 64)])
+    def test_chunked_matches_sequential(self, l, chunk):
+        key = jax.random.PRNGKey(l)
+        b, w = 2, 16
+        a = jax.nn.sigmoid(jax.random.normal(key, (b, l, w)))
+        bb = jax.random.normal(jax.random.fold_in(key, 1), (b, l, w))
+        h0 = jax.random.normal(jax.random.fold_in(key, 2), (b, w))
+        got = _chunked_linear_scan(a, bb, h0, chunk=chunk)
+        want = self.naive(a, bb, h0)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-5)
+
+    @given(st.integers(0, 10 ** 6), st.integers(1, 50))
+    @settings(max_examples=10, deadline=None)
+    def test_property_decay_bound(self, seed, l):
+        """|h_t| <= max|b| / (1 - max a) for contraction a in [0, 1)."""
+        key = jax.random.PRNGKey(seed)
+        a = 0.9 * jax.nn.sigmoid(jax.random.normal(key, (1, l, 4)))
+        bb = jax.random.normal(jax.random.fold_in(key, 1), (1, l, 4))
+        h = _chunked_linear_scan(a, bb, jnp.zeros((1, 4)), chunk=16)
+        bound = float(jnp.max(jnp.abs(bb))) / (1 - 0.9) + 1e-3
+        assert float(jnp.max(jnp.abs(h))) <= bound

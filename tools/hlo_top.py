@@ -1,0 +1,77 @@
+"""Top FLOP/byte/collective contributors of a cached dry-run HLO.
+Usage: PYTHONPATH=src python tools/hlo_top.py <tag> [n]"""
+import gzip, re, sys
+sys.path.insert(0, "src")
+from repro.launch import hlo_analysis as H
+
+tag = sys.argv[1]
+topn = int(sys.argv[2]) if len(sys.argv) > 2 else 12
+text = gzip.open(f"benchmarks/results/hlo/{tag}.txt.gz", "rt").read()
+comps = H.parse_hlo(text)
+entry = H._entry_name(comps, text)
+bytes_c, coll_c, flop_c = [], [], []
+
+def operands(ins):
+    m = re.search(r"\(([^)]*)\)", ins.line[ins.line.find(ins.op):])
+    return [o.strip().lstrip("%") for o in (m.group(1).split(",") if m else []) if o]
+
+def fpt(callee, op_names, bytes_env):
+    inner = comps.get(callee)
+    if inner is None: return sum(bytes_env.get(o,0) for o in op_names)
+    pname = {}
+    for ins in inner.instrs:
+        mp = re.search(r"parameter\((\d+)\)", ins.line)
+        if mp and ins.op == "parameter": pname[int(mp.group(1))] = ins.name
+    tot = 0
+    for i, outer in enumerate(op_names):
+        nm = pname.get(i); full = bytes_env.get(outer, 0)
+        if nm is None: tot += full; continue
+        cons = [ins for ins in inner.instrs if nm in operands(ins)]
+        if cons and all(c.op == "dynamic-slice" for c in cons):
+            tot += max(c.out_bytes for c in cons)
+        else: tot += full
+    return tot
+
+def walk(name, mult, in_fusion):
+    comp = comps.get(name)
+    if comp is None: return
+    dim_env, bytes_env = {}, {}
+    for ins in comp.instrs:
+        m = H._SHAPE_RE.search(ins.line.split("=")[1])
+        if m: dim_env[ins.name] = tuple(int(d) for d in m.group(2).split(",") if d)
+        bytes_env[ins.name] = ins.out_bytes
+    for ins in comp.instrs:
+        if ins.op == "dot":
+            flop_c.append((mult*H._dot_flops(ins, {}, dim_env), ins.name, name, mult))
+        if not in_fusion and ins.op in H._BYTES_OPS:
+            ops_ = operands(ins)
+            if ins.op == "dynamic-slice": b = 2*ins.out_bytes
+            elif ins.op == "dynamic-update-slice":
+                b = 3*(bytes_env.get(ops_[1],0) if len(ops_)>1 else 0)
+            elif ins.op in ("gather","scatter"): b = 2*ins.out_bytes
+            elif ins.op == "fusion":
+                mt = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                b = ins.out_bytes + fpt(mt.group(1) if mt else "", ops_, bytes_env)
+            else: b = ins.out_bytes + sum(bytes_env.get(o,0) for o in ops_)
+            bytes_c.append((mult*b, ins.op+" "+ins.name, name, mult))
+        if not in_fusion:
+            for coll in H.COLLECTIVES:
+                if ins.op == coll or ins.op == f"{coll}-start":
+                    g = H._group_size(ins.line, 512)
+                    w = 2*ins.out_bytes if coll=="all-reduce" else ins.out_bytes*(g if coll=="reduce-scatter" else 1)
+                    coll_c.append((mult*w, coll+" "+ins.name, name, mult, ins.out_bytes))
+    for callee, kind in comp.calls:
+        if kind == "while":
+            body,_,cond = callee.partition("|")
+            trips = comps[cond].trip_const if cond in comps and comps[cond].trip_const else 1
+            walk(body, mult*max(trips or 1,1), in_fusion)
+        elif kind in ("call","branch"): walk(callee, mult, in_fusion)
+        elif kind == "fusion": walk(callee, mult, True)
+
+walk(entry, 1.0, False)
+for title, lst in [("BYTES", bytes_c), ("COLLECTIVES", coll_c), ("DOT FLOPS", flop_c)]:
+    lst.sort(reverse=True)
+    tot = sum(x[0] for x in lst)
+    print(f"== {title}: total {tot:.3e} ==")
+    for row in lst[:topn]:
+        print("  " + f"{row[0]:.3e}  mult={row[3]:>8.0f}  {row[1][:60]}  in {row[2][:36]}")
