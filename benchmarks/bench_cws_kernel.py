@@ -1,31 +1,83 @@
 """CWS hashing + min-max Gram throughput: Pallas kernel (interpret mode on
 this CPU container — the BlockSpec tiling is what ships to TPU), the
 chunked pure-JAX path, and the naive oracle. Also the regenerated-RNG
-variant (beyond-paper HBM optimization, DESIGN.md §7).
+variant (beyond-paper HBM optimization, DESIGN.md §7) and the FUSED
+featurization pipeline (cws_encode) against its staged composition —
+emitted to BENCH_cws_fused.json so future PRs can track the trajectory.
 
 Wall-times here are CPU numbers — meaningful relative to each other for
 the JAX paths; the interpret-mode Pallas time measures the interpreter,
 not TPU performance (the TPU roofline for the kernel is derived
-analytically in EXPERIMENTS.md §Roofline: the kernel is VPU/HBM-bound at
-~8 flops/byte over 3 param matrices, or ~24 flops/byte with fused RNG).
+analytically in DESIGN.md §2: the kernel is VPU/HBM-bound at ~8
+flops/byte over 3 param matrices; fusing the encode step removes half the
+output traffic for the 0-bit scheme).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, save_json, timed
 from repro.core import cws_hash, make_cws_params
 from repro.core.cws import cws_hash_regen
-from repro.kernels import ops
-from repro.kernels.ref import cws_hash_ref, min_sum_ref
+from repro.kernels import ops, registry
 from repro.core.kernels import minmax_gram
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 
 def rand_nonneg(key, shape, sparsity=0.5):
     k1, k2 = jax.random.split(key)
     return (jnp.exp(jax.random.normal(k1, shape)) *
             jax.random.bernoulli(k2, 1 - sparsity, shape))
+
+
+def bench_fused_vs_staged(fast: bool) -> dict:
+    """Time fused (one kernel pass -> final indices) vs staged
+    (hash -> encode -> offsets) featurization on a fixed (n, D, k) grid.
+
+    Both sides run the registry's fast path for this backend (pure-JAX
+    reference on CPU, Mosaic on TPU) so the ratio isolates the pipeline
+    structure, not the interpreter.  A small interpret-mode shape records
+    the fused kernel-body cost for the correctness path.
+    """
+    grid = [(256, 128, 128)] if fast else [(512, 256, 256),
+                                           (1024, 512, 512),
+                                           (2048, 512, 1024)]
+    b_i, b_t = 8, 0
+    results = {"b_i": b_i, "b_t": b_t, "backend": registry.backend(),
+               "grid": {}}
+    for (n, d, k) in grid:
+        x = rand_nonneg(jax.random.PRNGKey(n + k), (n, d))
+        pipe = FeaturePipeline.create(jax.random.PRNGKey(7), d,
+                                      FeatureSpec(k, b_i=b_i, b_t=b_t))
+
+        def staged():
+            i_s, t_s = pipe.hashes(x)
+            return pipe.features_from_hashes(i_s, t_s)
+
+        out_f, us_fused = timed(lambda: pipe.features(x), repeats=3)
+        out_s, us_staged = timed(staged, repeats=3)
+        assert (out_f == out_s).all(), "fused != staged"
+        key = f"n{n}_d{d}_k{k}"
+        results["grid"][key] = {"fused_us": round(us_fused, 1),
+                                "staged_us": round(us_staged, 1),
+                                "speedup": round(us_staged /
+                                                 max(us_fused, 1e-9), 3)}
+        emit(f"cws_fused/{key}", us_fused,
+             f"staged={us_staged:.0f}us "
+             f"x{us_staged / max(us_fused, 1e-9):.2f}")
+
+    # interpret-mode kernel-body cost (tiny shape; correctness path only)
+    n, d, k = 64, 128, 64
+    x = rand_nonneg(jax.random.PRNGKey(3), (n, d))
+    p = make_cws_params(jax.random.PRNGKey(4), d, k)
+    _, us = timed(lambda: ops.cws_encode(x, p, b_i=b_i, bn=64, bk=64,
+                                         bd=64, interpret=True), repeats=1)
+    emit("cws_fused/pallas_interpret(64x128x64)", us,
+         "kernel-body correctness path")
+    results["interpret_us_64x128x64"] = round(us, 1)
+    save_json("BENCH_cws_fused", results)
+    return results
 
 
 def run(fast: bool = False):
@@ -50,6 +102,8 @@ def run(fast: bool = False):
     _, us = timed(lambda: ops.cws_hash(xs, ps, bn=64, bk=64, bd=64,
                                        interpret=True), repeats=1)
     emit("cws/pallas_interpret(64x128x64)", us, "correctness-path only")
+
+    bench_fused_vs_staged(fast)
 
     # min-max Gram: pallas-tiling ref vs pure-jnp oracle
     m = 256 if fast else 512

@@ -12,11 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, save_json
-from repro.core import (GRAM_FNS, cws_hash, make_cws_params, encode)
+from repro.core import GRAM_FNS, make_cws_params
 from repro.core.kernel_svm import best_accuracy_over_C
-from repro.core.linear_model import (TrainCfg, fit_linear, init_hashed,
-                                     init_dense, linear_accuracy)
+from repro.core.linear_model import (TrainCfg, fit_linear, init_bag,
+                                     linear_accuracy)
 from repro.data.synthetic import make_template_classification
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 KS = (32, 128, 512, 1024)
 BIS = (1, 2, 4, 8)
@@ -44,22 +45,27 @@ def run(fast: bool = False):
     emit("fig78/reference", us_ref,
          f"minmax={acc_mm*100:.1f} linear={acc_lin*100:.1f}")
 
-    params = make_cws_params(jax.random.PRNGKey(0), xtr.shape[1], max(ks))
-    i_tr, t_tr = cws_hash(xtr, params, row_block=256, hash_block=256)
-    i_te, t_te = cws_hash(xte, params, row_block=256, hash_block=256)
+    # the (k, b_i, b_t) sweep reuses ONE hash pass via the pipeline's
+    # staged escape hatch (production single-spec path is the fused
+    # pipe.features; see bench_cws_kernel for fused-vs-staged timing)
+    kmax = max(ks)
+    params = make_cws_params(jax.random.PRNGKey(0), xtr.shape[1], kmax)
+    pipe0 = FeaturePipeline(params, FeatureSpec(kmax, b_i=1))
+    i_tr, t_tr = pipe0.hashes(xtr)
+    i_te, t_te = pipe0.hashes(xte)
 
     def hashed_acc(k, b_i, b_t):
-        codes_tr = encode(i_tr[:, :k], t_tr[:, :k], b_i=b_i, b_t=b_t)
-        codes_te = encode(i_te[:, :k], t_te[:, :k], b_i=b_i, b_t=b_t)
-        width = 1 << (b_i + b_t)
+        spec = FeatureSpec(kmax, b_i=b_i, b_t=b_t)
+        pipe = FeaturePipeline(params, spec)
+        f_tr = pipe.features_from_hashes(i_tr[:, :k], t_tr[:, :k])
+        f_te = pipe.features_from_hashes(i_te[:, :k], t_te[:, :k])
         best = 0.0
         for l2 in (1e-6, 1e-5, 1e-4):
             cfg = TrainCfg(n_classes=n_classes, steps=250, lr=0.05,
                            l2=float(l2))
-            p0 = init_hashed(jax.random.PRNGKey(0), k, width, n_classes)
-            p = fit_linear(p0, codes_tr, ytr, cfg=cfg, kind="hashed")
-            best = max(best, linear_accuracy(p, codes_te, yte,
-                                             kind="hashed"))
+            p0 = init_bag(jax.random.PRNGKey(0), k * spec.width, n_classes)
+            p = fit_linear(p0, f_tr, ytr, cfg=cfg, kind="bag")
+            best = max(best, linear_accuracy(p, f_te, yte, kind="bag"))
         return best
 
     fig7 = {"minmax_ref": acc_mm * 100, "linear_ref": acc_lin * 100,

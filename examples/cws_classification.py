@@ -16,11 +16,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import GRAM_FNS, cws_hash, make_cws_params, encode
+from repro.core import GRAM_FNS
 from repro.core.kernel_svm import best_accuracy_over_C
-from repro.core.linear_model import (TrainCfg, fit_linear, init_hashed,
+from repro.core.linear_model import (TrainCfg, fit_linear, init_bag,
                                      linear_accuracy)
 from repro.data.synthetic import make_template_classification
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 
 def main():
@@ -44,23 +45,23 @@ def main():
             n_classes=ds.n_classes, sweeps=20)
         print(f"exact {kern:8s} kernel SVM: {acc * 100:.1f}%")
 
-    # 0-bit CWS -> linear classifier (the paper's proposal) --------------
+    # 0-bit CWS -> linear classifier (the paper's proposal), through the
+    # fused featurization pipeline: one kernel pass emits the final
+    # embedding-bag indices (a k-prefix slice reuses the same pass) -----
     kmax = max(ks)
-    params = make_cws_params(jax.random.PRNGKey(0), xtr.shape[1], kmax)
+    spec = FeatureSpec(num_hashes=kmax, b_i=args.b_i)
+    pipe = FeaturePipeline.create(jax.random.PRNGKey(0), xtr.shape[1], spec)
     t0 = time.perf_counter()
-    i_tr, t_tr = cws_hash(xtr, params, row_block=256, hash_block=256)
-    i_te, t_te = cws_hash(xte, params, row_block=256, hash_block=256)
-    print(f"hashed {xtr.shape[0] + xte.shape[0]} examples with k={kmax} "
+    feat_tr = pipe.features(xtr)
+    feat_te = pipe.features(xte)
+    print(f"featurized {xtr.shape[0] + xte.shape[0]} examples with k={kmax} "
           f"in {time.perf_counter() - t0:.1f}s")
 
     for k in ks:
-        codes_tr = encode(i_tr[:, :k], t_tr[:, :k], b_i=args.b_i)
-        codes_te = encode(i_te[:, :k], t_te[:, :k], b_i=args.b_i)
         cfg = TrainCfg(n_classes=ds.n_classes, steps=250, lr=0.05, l2=1e-5)
-        p0 = init_hashed(jax.random.PRNGKey(0), k, 1 << args.b_i,
-                         ds.n_classes)
-        p = fit_linear(p0, codes_tr, ytr, cfg=cfg, kind="hashed")
-        acc = linear_accuracy(p, codes_te, yte, kind="hashed")
+        p0 = init_bag(jax.random.PRNGKey(0), k * spec.width, ds.n_classes)
+        p = fit_linear(p0, feat_tr[:, :k], ytr, cfg=cfg, kind="bag")
+        acc = linear_accuracy(p, feat_te[:, :k], yte, kind="bag")
         print(f"0-bit CWS + linear (k={k:5d}, b_i={args.b_i}): "
               f"{acc * 100:.1f}%")
 

@@ -178,8 +178,6 @@ def cws_hash_regen(x: Array, key: Array, num_hashes: int, *,
 
     def per_hashblock(kb_key):
         p = make_cws_params(kb_key, d, hash_block)
-        outs_i = []
-        outs_t = []
         pad_n = (-n) % row_block
         lu = jnp.pad(logu, ((0, pad_n), (0, 0)), constant_values=-jnp.inf)
         blocks = lu.reshape(-1, row_block, d)

@@ -40,6 +40,13 @@ def init_hashed(key: Array, k: int, width: int, n_classes: int) -> LinearParams:
                         jnp.zeros((n_classes,), jnp.float32))
 
 
+def init_bag(key: Array, num_features: int, n_classes: int) -> LinearParams:
+    """Flat embedding-bag table (F, C) for pipeline feature indices
+    (F = k * 2^{b_i+b_t}); the (k, width, C) 'hashed' layout reshaped."""
+    return LinearParams(jnp.zeros((num_features, n_classes), jnp.float32),
+                        jnp.zeros((n_classes,), jnp.float32))
+
+
 def dense_logits(params: LinearParams, x: Array) -> Array:
     return x @ params.w + params.b
 
@@ -53,6 +60,18 @@ def hashed_logits(params: LinearParams, codes: Array) -> Array:
         axis=2,
     )[:, :, 0, :]
     return gathered.sum(axis=1) + params.b
+
+
+def bag_logits(params: LinearParams, idx: Array) -> Array:
+    """idx: (n, k) int32 GLOBAL feature indices in [0, F) — exactly what
+    repro.pipeline.FeaturePipeline.features emits.  Embedding-bag gather
+    over the flat (F, C) table."""
+    return jnp.take(params.w, idx.astype(jnp.int32).clip(0),
+                    axis=0).sum(axis=1) + params.b
+
+
+_LOGITS_FNS = {"dense": dense_logits, "hashed": hashed_logits,
+               "bag": bag_logits}
 
 
 def squared_hinge_loss(logits: Array, labels: Array, n_classes: int) -> Array:
@@ -91,7 +110,7 @@ def _loss_fn(params, xb, yb, cfg: TrainCfg, logits_fn):
 def fit_linear(params: LinearParams, x: Array, labels: Array, *,
                cfg: TrainCfg, kind: str = "dense") -> LinearParams:
     """Full-batch Adam (deterministic, good up to ~100k examples on CPU)."""
-    logits_fn = dense_logits if kind == "dense" else hashed_logits
+    logits_fn = _LOGITS_FNS[kind]
     tx = optim.chain(optim.clip_by_global_norm(10.0),
                      optim.adamw(optim.cosine_schedule(cfg.lr, cfg.steps)))
     state = tx.init(params)
@@ -108,7 +127,7 @@ def fit_linear(params: LinearParams, x: Array, labels: Array, *,
 
 def linear_accuracy(params: LinearParams, x: Array, labels: Array,
                     kind: str = "dense") -> float:
-    logits_fn = dense_logits if kind == "dense" else hashed_logits
+    logits_fn = _LOGITS_FNS[kind]
     pred = jnp.argmax(logits_fn(params, x), axis=-1)
     return float(jnp.mean((pred == labels).astype(jnp.float32)))
 
@@ -117,15 +136,16 @@ def best_linear_accuracy_over_C(x_tr, y_tr, x_te, y_te, *, n_classes,
                                 kind="dense",
                                 l2s=(1e-6, 1e-5, 1e-4, 1e-3),
                                 steps=400, lr=0.05):
-    """Mirror of the paper's C sweep for the linear learner."""
+    """Mirror of the paper's C sweep for the linear learner (dense only;
+    hashed/bag features go through best_hashed_accuracy_over_C or
+    best_bag_accuracy_over_C)."""
+    if kind != "dense":
+        raise ValueError("use best_hashed_accuracy_over_C / "
+                         "best_bag_accuracy_over_C for hashed features")
     best = 0.0
     for l2 in l2s:
         cfg = TrainCfg(n_classes=n_classes, steps=steps, lr=lr, l2=float(l2))
-        if kind == "dense":
-            p0 = init_dense(jax.random.PRNGKey(0), x_tr.shape[-1], n_classes)
-        else:
-            k, width = x_tr.shape[-1], None
-            raise ValueError("use fit_hashed_over_C for hashed features")
+        p0 = init_dense(jax.random.PRNGKey(0), x_tr.shape[-1], n_classes)
         p = fit_linear(p0, x_tr, y_tr, cfg=cfg, kind=kind)
         best = max(best, linear_accuracy(p, x_te, y_te, kind=kind))
     return best
@@ -141,4 +161,18 @@ def best_hashed_accuracy_over_C(codes_tr, y_tr, codes_te, y_te, *, n_classes,
         p0 = init_hashed(jax.random.PRNGKey(0), k, width, n_classes)
         p = fit_linear(p0, codes_tr, y_tr, cfg=cfg, kind="hashed")
         best = max(best, linear_accuracy(p, codes_te, y_te, kind="hashed"))
+    return best
+
+
+def best_bag_accuracy_over_C(idx_tr, y_tr, idx_te, y_te, *, n_classes,
+                             num_features: int,
+                             l2s=(1e-6, 1e-5, 1e-4),
+                             steps=400, lr=0.05):
+    """C sweep over pipeline feature indices (the fused-kernel artifact)."""
+    best = 0.0
+    for l2 in l2s:
+        cfg = TrainCfg(n_classes=n_classes, steps=steps, lr=lr, l2=float(l2))
+        p0 = init_bag(jax.random.PRNGKey(0), num_features, n_classes)
+        p = fit_linear(p0, idx_tr, y_tr, cfg=cfg, kind="bag")
+        best = max(best, linear_accuracy(p, idx_te, y_te, kind="bag"))
     return best

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for 0-bit/full CWS hashing.
+"""Pallas TPU kernels for 0-bit/full CWS hashing and fused featurization.
 
 Computes, for every (row, hash) pair, the argmin over dimensions of
 
@@ -13,14 +13,20 @@ TPU adaptation (vs the paper's per-vector CPU loop):
     column log u against the parameter row) — no rank-3 temporaries, so
     VMEM stays at ~6 tiles regardless of BD;
   * the kernel is VPU-bound (log/floor/mul on 8x128 lanes) and
-    HBM-traffic-dominated by the 3 parameter matrices; the ops.py wrapper
-    therefore reuses one parameter fetch across the whole row-block
-    (params are indexed by (d, k) only — Pallas keeps the tile resident
-    while the row index varies fastest ... see ops.cws_hash for the grid
-    order rationale).
+    HBM-traffic-dominated by the 3 parameter matrices (DESIGN.md §2).
+
+Two emit variants share the accumulation loop:
+  * ``cws_hash_pallas``   — writes raw (i*, t*), two (n, k) int32 arrays;
+  * ``cws_encode_pallas`` — the FUSED featurization kernel: applies b_i/b_t
+    bit-masking, sentinel handling and the per-hash feature offset inside
+    the emit step and writes final embedding-bag indices, ONE (n, k) int32
+    array.  For the paper's 0-bit scheme (b_t = 0) this halves output
+    traffic (t* is never materialized — it is not even tracked in scratch)
+    and eliminates the separate encode + feature_indices passes.
 
 Zero entries (log u = -inf) never win the argmin; all-zero rows return the
-sentinel i* = -1 (matching repro.core.cws semantics).
+sentinel i* = -1 (matching repro.core.cws semantics), which the fused
+kernel maps to bucket 0 of its hash (matching core.hashing.feature_indices).
 """
 from __future__ import annotations
 
@@ -32,6 +38,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_SENTINEL = -1
+
+
+def _accum_loop(logu, r_ref, logc_ref, beta_ref, d_step, bd, carry):
+    """Run the BD-dimension argmin update on a (best_a, best_i[, best_t])
+    carry; t tracking is skipped when the carry has no t slot."""
+    track_t = len(carry) == 3
+
+    def body(d, carry):
+        a, i = carry[0], carry[1]
+        lu = logu[:, d][:, None]                   # (BN, 1)
+        r = r_ref[d, :][None, :]                   # (1, BK)
+        lc = logc_ref[d, :][None, :]
+        be = beta_ref[d, :][None, :]
+        tt = jnp.floor(lu / r + be)                # (BN, BK)
+        la = lc - r * (tt - be + 1.0)
+        la = jnp.where(jnp.isfinite(lu), la, jnp.inf)
+        upd = la < a
+        d_global = (d_step * bd + d).astype(jnp.int32)
+        a = jnp.where(upd, la, a)
+        i = jnp.where(upd, d_global, i)
+        if track_t:
+            return a, i, jnp.where(upd, tt, carry[2])
+        return a, i
+
+    return jax.lax.fori_loop(0, bd, body, carry)
 
 
 def _cws_kernel(x_ref, r_ref, logc_ref, beta_ref, istar_ref, tstar_ref,
@@ -47,24 +78,8 @@ def _cws_kernel(x_ref, r_ref, logc_ref, beta_ref, istar_ref, tstar_ref,
     x = x_ref[...]            # (BN, BD)
     logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
 
-    def body(d, carry):
-        a, i, t = carry
-        lu = logu[:, d][:, None]                   # (BN, 1)
-        r = r_ref[d, :][None, :]                   # (1, BK)
-        lc = logc_ref[d, :][None, :]
-        be = beta_ref[d, :][None, :]
-        tt = jnp.floor(lu / r + be)                # (BN, BK)
-        la = lc - r * (tt - be + 1.0)
-        la = jnp.where(jnp.isfinite(lu), la, jnp.inf)
-        upd = la < a
-        d_global = (d_step * bd + d).astype(jnp.int32)
-        a = jnp.where(upd, la, a)
-        i = jnp.where(upd, d_global, i)
-        t = jnp.where(upd, tt, t)
-        return a, i, t
-
-    a0, i0, t0 = best_a[...], best_i[...], best_t[...]
-    a1, i1, t1 = jax.lax.fori_loop(0, bd, body, (a0, i0, t0))
+    a1, i1, t1 = _accum_loop(logu, r_ref, logc_ref, beta_ref, d_step, bd,
+                             (best_a[...], best_i[...], best_t[...]))
     best_a[...] = a1
     best_i[...] = i1
     best_t[...] = t1
@@ -75,6 +90,71 @@ def _cws_kernel(x_ref, r_ref, logc_ref, beta_ref, istar_ref, tstar_ref,
         tstar_ref[...] = jnp.clip(best_t[...], -2 ** 30, 2 ** 30).astype(jnp.int32)
 
 
+def _cws_encode_kernel(x_ref, r_ref, logc_ref, beta_ref, idx_ref, *scratch,
+                       bd: int, n_d_steps: int, b_i: int, b_t: int, bk: int):
+    """Fused CWS -> b-bit code -> embedding-bag index.  ``scratch`` is
+    (best_a, best_i) for the 0-bit scheme (b_t == 0) and
+    (best_a, best_i, best_t) when t* bits are kept."""
+    d_step = pl.program_id(2)
+    hash_block = pl.program_id(1)
+    best_a, best_i = scratch[0], scratch[1]
+    best_t = scratch[2] if b_t else None
+
+    @pl.when(d_step == 0)
+    def _init():
+        best_a[...] = jnp.full_like(best_a[...], jnp.inf)
+        best_i[...] = jnp.full_like(best_i[...], NEG_SENTINEL)
+        if b_t:
+            best_t[...] = jnp.zeros_like(best_t[...])
+
+    x = x_ref[...]
+    logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+
+    carry = (best_a[...], best_i[...]) + ((best_t[...],) if b_t else ())
+    out = _accum_loop(logu, r_ref, logc_ref, beta_ref, d_step, bd, carry)
+    best_a[...] = out[0]
+    best_i[...] = out[1]
+    if b_t:
+        best_t[...] = out[2]
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _emit():
+        i = best_i[...]
+        code = i if b_i == 0 else jnp.bitwise_and(i, (1 << b_i) - 1)
+        if b_t:
+            t = jnp.clip(best_t[...], -2 ** 30, 2 ** 30).astype(jnp.int32)
+            code = code * (1 << b_t) + jnp.bitwise_and(t, (1 << b_t) - 1)
+        code = jnp.where(i < 0, 0, code)           # sentinel -> bucket 0
+        width = jnp.int32(1 << (b_i + b_t))
+        col = jax.lax.broadcasted_iota(jnp.int32, code.shape, 1)
+        hash_id = hash_block * bk + col            # global hash index
+        idx_ref[...] = hash_id * width + code
+
+
+def _pad_operands(x, r, log_c, beta, bn, bk, bd):
+    n, d = x.shape
+    k = r.shape[1]
+    pad_n, pad_d, pad_k = (-n) % bn, (-d) % bd, (-k) % bk
+    # zero-padded x columns are masked by construction (log 0 = -inf);
+    # padded params are never selected for real columns, r=1 avoids div-0.
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    rp = jnp.pad(r, ((0, pad_d), (0, pad_k)), constant_values=1.0)
+    lcp = jnp.pad(log_c, ((0, pad_d), (0, pad_k)))
+    bep = jnp.pad(beta, ((0, pad_d), (0, pad_k)))
+    return xp, rp, lcp, bep
+
+
+def _cws_specs(bn, bk, bd):
+    in_specs = [
+        pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
+        pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+        pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+        pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
+    ]
+    out_spec = pl.BlockSpec((bn, bk), lambda i, j, s: (i, j))
+    return in_specs, out_spec
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bn", "bk", "bd", "interpret"))
 def cws_hash_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
@@ -83,37 +163,20 @@ def cws_hash_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
     """x: (n, D) nonneg fp32; params (D, k) fp32 -> (i*, t*) each (n, k) i32."""
     n, d = x.shape
     k = r.shape[1]
-    bn = min(bn, n)
-    bk = min(bk, k)
-    bd = min(bd, d)
-    pad_n, pad_d, pad_k = (-n) % bn, (-d) % bd, (-k) % bk
-    # zero-padded x columns are masked by construction (log 0 = -inf);
-    # padded params are never selected for real columns, r=1 avoids div-0.
-    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
-    rp = jnp.pad(r, ((0, pad_d), (0, pad_k)), constant_values=1.0)
-    lcp = jnp.pad(log_c, ((0, pad_d), (0, pad_k)))
-    bep = jnp.pad(beta, ((0, pad_d), (0, pad_k)))
+    bn, bk, bd = min(bn, n), min(bk, k), min(bd, d)
+    xp, rp, lcp, bep = _pad_operands(x, r, log_c, beta, bn, bk, bd)
     np_, dp_, kp_ = xp.shape[0], xp.shape[1], rp.shape[1]
     n_d_steps = dp_ // bd
 
-    grid = (np_ // bn, kp_ // bk, n_d_steps)
+    in_specs, out_spec = _cws_specs(bn, bk, bd)
     kernel = functools.partial(_cws_kernel, bd=bd, n_d_steps=n_d_steps)
-    out_shape = [jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
-                 jax.ShapeDtypeStruct((np_, kp_), jnp.int32)]
     i_star, t_star = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
-            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
-            pl.BlockSpec((bd, bk), lambda i, j, s: (s, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bn, bk), lambda i, j, s: (i, j)),
-            pl.BlockSpec((bn, bk), lambda i, j, s: (i, j)),
-        ],
-        out_shape=out_shape,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
+                   jax.ShapeDtypeStruct((np_, kp_), jnp.int32)],
         scratch_shapes=[
             pltpu.VMEM((bn, bk), jnp.float32),   # best log_a
             pltpu.VMEM((bn, bk), jnp.int32),     # best index
@@ -122,3 +185,43 @@ def cws_hash_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
         interpret=interpret,
     )(xp, rp, lcp, bep)
     return i_star[:n, :k], t_star[:n, :k]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_i", "b_t", "bn", "bk", "bd",
+                                    "interpret"))
+def cws_encode_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
+                      beta: jax.Array, *, b_i: int, b_t: int = 0,
+                      bn: int = 128, bk: int = 128, bd: int = 256,
+                      interpret: bool = False) -> jax.Array:
+    """Fused featurization: x (n, D) nonneg -> embedding-bag indices
+    (n, k) int32 into the k * 2^{b_i+b_t} feature space.
+
+    Bit-exact vs ``feature_indices(encode(cws_hash(...)))`` but with a
+    single HBM output array and no (i*, t*) intermediates.
+    """
+    n, d = x.shape
+    k = r.shape[1]
+    bn, bk, bd = min(bn, n), min(bk, k), min(bd, d)
+    xp, rp, lcp, bep = _pad_operands(x, r, log_c, beta, bn, bk, bd)
+    np_, dp_, kp_ = xp.shape[0], xp.shape[1], rp.shape[1]
+    n_d_steps = dp_ // bd
+
+    scratch = [pltpu.VMEM((bn, bk), jnp.float32),    # best log_a
+               pltpu.VMEM((bn, bk), jnp.int32)]      # best index
+    if b_t:
+        scratch.append(pltpu.VMEM((bn, bk), jnp.float32))   # best t
+
+    in_specs, out_spec = _cws_specs(bn, bk, bd)
+    kernel = functools.partial(_cws_encode_kernel, bd=bd,
+                               n_d_steps=n_d_steps, b_i=b_i, b_t=b_t, bk=bk)
+    idx = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, rp, lcp, bep)
+    return idx[:n, :k]

@@ -1,48 +1,165 @@
-"""Jit'd public wrappers around the Pallas kernels with backend dispatch.
+"""Registry-backed public ops: one call site per logical kernel.
 
-On TPU the Mosaic kernels run natively; everywhere else (this CPU
-container, debugging) ``interpret=True`` executes the same kernel body via
-the Pallas interpreter, so correctness is validated on CPU against ref.py
-while the BlockSpec tiling is exactly what ships to TPU.
+Each op has ``pallas`` / ``pallas-interpret`` / ``reference``
+implementations registered in :mod:`repro.kernels.registry`; dispatch is
+by backend capability (Mosaic on TPU, pure-JAX reference on CPU), with the
+interpreter available everywhere as the kernel-body correctness path — the
+BlockSpec tiling it executes is exactly what ships to TPU.
+
+Block sizes default to ``registry.choose_blocks`` (autotune table +
+VMEM-budget heuristic keyed on (n, D, k)) instead of hardcoded constants;
+explicit ``bn/bk/bd`` kwargs still pin them for tests and sweeps.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cws import CWSParams
-from repro.kernels.cws_hash import cws_hash_pallas
-from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
+from repro.core import cws as core_cws
+from repro.core import hashing as core_hashing
 from repro.kernels import ref
+from repro.kernels import registry
+from repro.kernels.cws_hash import cws_hash_pallas, cws_encode_pallas
+from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _blocks(n: int, d: int, k: int, bn, bk, bd, op: str = "cws"):
+    hn, hk, hd = registry.choose_blocks(n, d, k, op=op)
+    return (bn or hn, bk or hk, bd or hd)
 
 
-def cws_hash(x: jax.Array, params: CWSParams, *, bn: int = 128,
-             bk: int = 128, bd: int = 256, interpret: bool | None = None):
-    """Pallas CWS: x (n, D) nonneg -> (i*, t*) each (n, k) int32."""
-    if interpret is None:
-        interpret = not _on_tpu()
+# ---------------------------------------------------------------------------
+# implementation registration
+# ---------------------------------------------------------------------------
+
+@registry.register("cws_hash", "pallas", requires=("tpu",))
+def _cws_hash_tpu(x, params: CWSParams, *, bn, bk, bd):
     return cws_hash_pallas(x, params.r, params.log_c, params.beta,
-                           bn=bn, bk=bk, bd=bd, interpret=interpret)
+                           bn=bn, bk=bk, bd=bd, interpret=False)
 
 
-def minmax_gram(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
-                bd: int = 256, interpret: bool | None = None) -> jax.Array:
+@registry.register("cws_hash", "pallas-interpret")
+def _cws_hash_interp(x, params: CWSParams, *, bn, bk, bd):
+    return cws_hash_pallas(x, params.r, params.log_c, params.beta,
+                           bn=bn, bk=bk, bd=bd, interpret=True)
+
+
+@registry.register("cws_hash", "reference")
+def _cws_hash_ref(x, params: CWSParams, *, bn, bk, bd):
+    # chunked pure-JAX path; block kwargs map onto its chunk sizes
+    return core_cws.cws_hash(x, params, row_block=max(bn, 8),
+                             hash_block=max(bk, 8))
+
+
+@registry.register("cws_encode", "pallas", requires=("tpu",))
+def _cws_encode_tpu(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_pallas(x, params.r, params.log_c, params.beta,
+                             b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd,
+                             interpret=False)
+
+
+@registry.register("cws_encode", "pallas-interpret")
+def _cws_encode_interp(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_pallas(x, params.r, params.log_c, params.beta,
+                             b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd,
+                             interpret=True)
+
+
+@registry.register("cws_encode", "reference")
+def _cws_encode_ref(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    # the staged composition, kept in ONE place as the semantic definition
+    i_star, t_star = _cws_hash_ref(x, params, bn=bn, bk=bk, bd=bd)
+    codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
+    return core_hashing.feature_indices(codes, b_i=b_i, b_t=b_t)
+
+
+@registry.register("minmax_gram", "pallas", requires=("tpu",))
+def _minmax_gram_tpu(x, y, *, bm, bn, bd):
+    return minmax_gram_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=False)
+
+
+@registry.register("minmax_gram", "pallas-interpret")
+def _minmax_gram_interp(x, y, *, bm, bn, bd):
+    return minmax_gram_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=True)
+
+
+@registry.register("minmax_gram", "reference")
+def _minmax_gram_ref(x, y, *, bm, bn, bd):
+    return ref.minmax_gram_ref(x, y)
+
+
+@registry.register("min_sum", "pallas", requires=("tpu",))
+def _min_sum_tpu(x, y, *, bm, bn, bd):
+    return min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=False)
+
+
+@registry.register("min_sum", "pallas-interpret")
+def _min_sum_interp(x, y, *, bm, bn, bd):
+    return min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=True)
+
+
+@registry.register("min_sum", "reference")
+def _min_sum_ref(x, y, *, bm, bn, bd):
+    return ref.min_sum_ref(x, y)
+
+
+# ---------------------------------------------------------------------------
+# public wrappers (stable signatures; dispatch through the registry)
+# ---------------------------------------------------------------------------
+
+def _impl_name(interpret: bool | None, impl: str | None) -> str | None:
+    """Back-compat shim: the old ``interpret`` kwarg pins the kernel-body
+    path; ``impl`` pins a registry name; neither -> capability dispatch
+    onto the kernel path (pallas on TPU, interpreter elsewhere — ops.* is
+    the kernel-parity layer; use the pipeline for production CPU paths)."""
+    if impl is not None:
+        return impl
     if interpret is None:
-        interpret = not _on_tpu()
-    return minmax_gram_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+        return registry.pallas_impl()
+    return "pallas-interpret" if interpret else "pallas"
 
 
-def min_sum(x: jax.Array, y: jax.Array, *, bm: int = 128, bn: int = 128,
-            bd: int = 256, interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = not _on_tpu()
-    return min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+def cws_hash(x: jax.Array, params: CWSParams, *, bn: int | None = None,
+             bk: int | None = None, bd: int | None = None,
+             interpret: bool | None = None, impl: str | None = None):
+    """Pallas CWS: x (n, D) nonneg -> (i*, t*) each (n, k) int32."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], params.num_hashes,
+                         bn, bk, bd)
+    fn = registry.resolve("cws_hash", _impl_name(interpret, impl)).fn
+    return fn(x, params, bn=bn, bk=bk, bd=bd)
+
+
+def cws_encode(x: jax.Array, params: CWSParams, *, b_i: int, b_t: int = 0,
+               bn: int | None = None, bk: int | None = None,
+               bd: int | None = None, interpret: bool | None = None,
+               impl: str | None = None) -> jax.Array:
+    """Fused featurization: x (n, D) nonneg -> embedding-bag indices
+    (n, k) int32 into k * 2^{b_i+b_t} features (DESIGN.md §6)."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], params.num_hashes,
+                         bn, bk, bd)
+    fn = registry.resolve("cws_encode", _impl_name(interpret, impl)).fn
+    return fn(x, params, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
+
+
+def minmax_gram(x: jax.Array, y: jax.Array, *, bm: int | None = None,
+                bn: int | None = None, bd: int | None = None,
+                interpret: bool | None = None,
+                impl: str | None = None) -> jax.Array:
+    bm_, bn_, bd_ = _blocks(x.shape[0], x.shape[1], y.shape[0],
+                            bm, bn, bd, op="gram")
+    fn = registry.resolve("minmax_gram", _impl_name(interpret, impl)).fn
+    return fn(x, y, bm=bm_, bn=bn_, bd=bd_)
+
+
+def min_sum(x: jax.Array, y: jax.Array, *, bm: int | None = None,
+            bn: int | None = None, bd: int | None = None,
+            interpret: bool | None = None,
+            impl: str | None = None) -> jax.Array:
+    bm_, bn_, bd_ = _blocks(x.shape[0], x.shape[1], y.shape[0],
+                            bm, bn, bd, op="gram")
+    fn = registry.resolve("min_sum", _impl_name(interpret, impl)).fn
+    return fn(x, y, bm=bm_, bn=bn_, bd=bd_)
 
 
 # re-export oracles for test convenience

@@ -1,0 +1,175 @@
+"""Kernel implementation registry with backend-capability dispatch.
+
+Every logical op (``cws_hash``, ``cws_encode``, ``minmax_gram``,
+``min_sum``) has named implementations:
+
+  * ``pallas``            — the Mosaic kernel, requires a TPU backend;
+  * ``pallas-interpret``  — the same kernel body through the Pallas
+                            interpreter (any backend; the correctness path
+                            on this CPU container);
+  * ``reference``         — pure-JAX composition with identical semantics
+                            (fast on CPU, the oracle everywhere).
+
+Dispatch is by capability: ``resolve(op)`` picks ``pallas`` when a TPU is
+attached and ``reference`` otherwise, so production code never hard-codes
+a backend.  ``resolve(op, "pallas-interpret")`` pins an implementation
+explicitly (tests, benchmarks).
+
+Block sizes are no longer hardcoded at the call sites: ``choose_blocks``
+consults a small autotune table keyed on pow2-bucketed (n, D, k) and falls
+back to a VMEM-budget heuristic (see DESIGN.md §2 for the roofline that
+motivates the defaults).  The table is process-global and extendable via
+``update_block_table`` so future TPU sweeps can refine it without touching
+call sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+
+__all__ = [
+    "KernelImpl", "register", "resolve", "impl_names", "backend",
+    "on_tpu", "auto_impl", "pallas_impl", "choose_blocks",
+    "update_block_table", "BLOCK_TABLE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelImpl:
+    op: str
+    name: str
+    fn: Callable
+    requires: Tuple[str, ...] = ()     # backend capabilities, e.g. ("tpu",)
+
+    def available(self) -> bool:
+        return all(cap == backend() for cap in self.requires)
+
+
+_REGISTRY: Dict[str, Dict[str, KernelImpl]] = {}
+
+
+def backend() -> str:
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return backend() == "tpu"
+
+
+def register(op: str, name: str, *, requires: Tuple[str, ...] = ()):
+    """Decorator: register ``fn`` as implementation ``name`` of ``op``."""
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY.setdefault(op, {})[name] = KernelImpl(
+            op=op, name=name, fn=fn, requires=tuple(requires))
+        return fn
+    return deco
+
+
+def impl_names(op: str) -> Tuple[str, ...]:
+    return tuple(_REGISTRY.get(op, {}))
+
+
+def auto_impl(op: str) -> str:
+    """Capability-based default: the Mosaic kernel on TPU, the pure-JAX
+    reference elsewhere (the interpreter is a correctness tool, not a
+    production path)."""
+    return "pallas" if on_tpu() else "reference"
+
+
+def pallas_impl(op: str = "") -> str:
+    """The kernel-body path for the current backend (interpret off-TPU)."""
+    return "pallas" if on_tpu() else "pallas-interpret"
+
+
+def resolve(op: str, impl: str | None = None) -> KernelImpl:
+    """Look up an implementation; ``impl=None`` dispatches by capability."""
+    table = _REGISTRY.get(op)
+    if not table:
+        raise KeyError(f"no implementations registered for op {op!r}")
+    name = impl or auto_impl(op)
+    if name not in table:
+        raise KeyError(f"op {op!r} has no impl {name!r}; "
+                       f"registered: {sorted(table)}")
+    chosen = table[name]
+    if not chosen.available():
+        raise RuntimeError(
+            f"impl {name!r} of op {op!r} requires backend "
+            f"{chosen.requires} but default backend is {backend()!r}")
+    return chosen
+
+
+# ---------------------------------------------------------------------------
+# block-size selection
+# ---------------------------------------------------------------------------
+
+# Tuned entries keyed on (op_family, pow2-bucketed (n, D, k)) ->
+# (bn, bk, bd).  The family ("cws": rows x dims x hashes; "gram":
+# rows x dims x cols) keeps CWS-measured entries from silently applying
+# to the gram kernels, whose axis meanings and VMEM footprint differ.
+# Seeded from the VMEM model below at the shapes the benchmarks exercise;
+# TPU autotune sweeps append to this via update_block_table.
+BLOCK_TABLE: Dict[Tuple[str, int, int, int], Tuple[int, int, int]] = {
+    ("cws", 256, 512, 512):    (128, 128, 512),
+    ("cws", 1024, 512, 512):   (128, 128, 512),
+    ("cws", 4096, 1024, 1024): (256, 128, 512),
+    ("cws", 8192, 65536, 1024): (128, 128, 512),
+}
+
+_VMEM_BUDGET = 8 * 2 ** 20   # conservative half of ~16MB/core
+
+
+def update_block_table(entries: Dict[Tuple[str, int, int, int],
+                                     Tuple[int, int, int]]) -> None:
+    BLOCK_TABLE.update(entries)
+
+
+def _pow2_at_most(v: int, lo: int, hi: int) -> int:
+    p = lo
+    while p * 2 <= min(v, hi):
+        p *= 2
+    return p
+
+
+def _bucket(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def _vmem_bytes(bn: int, bk: int, bd: int) -> int:
+    # x tile + 3 param tiles + 3 scratch accumulators + 2 output tiles, fp32
+    return 4 * (bn * bd + 3 * bd * bk + 3 * bn * bk + 2 * bn * bk)
+
+
+def choose_blocks(n: int, d: int, k: int, *,
+                  op: str = "cws") -> Tuple[int, int, int]:
+    """(bn, bk, bd) for a kernel family at problem size (n, D, k).
+
+    Consults the autotune table first (family + pow2-bucketed key), then
+    a VMEM heuristic: start from the VPU-friendly (128, 128, 4096)
+    ceiling, clamp to the problem, and shrink bd -> bn -> bk until the
+    working set fits the budget.  The VMEM model is the CWS kernel's (the larger of
+    the two families), so it is conservative for the gram kernels.  Never
+    returns a block below the fp32 (8, 128) native tile unless the
+    problem itself is smaller.
+    """
+    key = (op, _bucket(n), _bucket(d), _bucket(k))
+    if key in BLOCK_TABLE:
+        bn, bk, bd = BLOCK_TABLE[key]
+        return min(bn, n), min(bk, k), min(bd, d)
+    bn = _pow2_at_most(n, 1, 128)
+    bk = _pow2_at_most(k, 1, 128)
+    # bd ceiling of 4096 lets the parameter fetch amortize on huge-D data
+    # (the paper's 65536-dim word vectors); the budget loops below bring
+    # it back down when the (bn, bk) tile leaves too little VMEM.
+    bd = _pow2_at_most(d, 1, 4096)
+    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bd > 128:
+        bd //= 2
+    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bn > 8:
+        bn //= 2
+    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bk > 8:
+        bk //= 2
+    return bn, bk, bd

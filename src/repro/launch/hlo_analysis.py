@@ -57,6 +57,17 @@ _BYTES_OPS = {
 }
 
 
+def _operand_names(arglist: str) -> List[str]:
+    """Operand instruction names from an HLO operand list.  Newer XLA
+    inlines each operand's type (``f32[64,128]{1,0} %Arg_0.1``), so a
+    naive comma split breaks inside shape brackets — pull the %-prefixed
+    names instead, falling back to the comma split for bare-name HLO."""
+    names = re.findall(r"%([\w\.\-]+)", arglist)
+    if names:
+        return names
+    return [o.strip() for o in arglist.split(",") if o.strip()]
+
+
 def _shapes_bytes(sig: str) -> int:
     """Total bytes of all array shapes appearing in a type signature."""
     total = 0
@@ -194,7 +205,7 @@ def _dot_flops(instr: Instr, shape_env: Dict[str, int],
     mo = re.search(r"\(([^)]*)\)", instr.line[instr.line.find(instr.op):])
     if not ml or not mo:
         return 2.0 * out_elems  # fallback
-    operands = [o.strip().lstrip("%") for o in mo.group(1).split(",")]
+    operands = _operand_names(mo.group(1))
     lhs_dims = dim_env.get(operands[0]) if operands else None
     if lhs_dims is None:
         return 2.0 * out_elems
@@ -225,7 +236,7 @@ def analyze(text: str, n_devices: int) -> HLOStats:
         mo = re.search(r"\(([^)]*)\)", ins.line[ins.line.find(ins.op):])
         if not mo:
             return []
-        return [o.strip().lstrip("%") for o in mo.group(1).split(",") if o]
+        return _operand_names(mo.group(1))
 
     def _fusion_param_traffic(callee: str, op_names, bytes_env) -> int:
         """Traffic of a fusion's inputs: a parameter consumed ONLY via

@@ -1,14 +1,16 @@
 """CWSClassifierHead: the paper's pipeline as a first-class model head.
 
-Any backbone's nonnegative pooled features (post-ReLU) -> 0-bit CWS hash
--> b_i-bit bucketing -> embedding-bag linear classifier. Because the hash
-codes are one-hot per hash, the classifier weight (k, 2^{b_i}, C) is
-exactly a (small) vocab-parallel embedding table and shards over `model`
-like the LM vocab (DESIGN.md §4).
+Any backbone's nonnegative pooled features (post-ReLU) -> fused CWS
+featurization (repro.pipeline) -> embedding-bag linear classifier.
+Because the hash codes are one-hot per hash, the classifier weight
+(k, 2^{b_i}, C) is exactly a (small) vocab-parallel embedding table and
+shards over `model` like the LM vocab (DESIGN.md §4).
 
 The CWS parameters are BUFFERS (not trained); the head is trained with the
-same embedding-bag machinery as repro.core.linear_model. At serving time
-the hashing runs as the Pallas kernel (repro.kernels.ops.cws_hash).
+same embedding-bag machinery as repro.core.linear_model.  Featurization
+dispatches through the kernel registry: the Mosaic kernel on TPU, the
+pure-JAX reference on CPU; ``use_pallas=True`` pins the kernel-body path
+(interpret mode off-TPU) for parity checks.
 """
 from __future__ import annotations
 
@@ -17,10 +19,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cws import CWSParams, make_cws_params, cws_hash
-from repro.core.hashing import encode
+from repro.core.cws import CWSParams, make_cws_params
+from repro.core.linear_model import LinearParams, bag_logits
+from repro.kernels import registry
 from repro.models.config import ModelConfig
 from repro.models.sharding import shard
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 Array = jax.Array
 
@@ -41,21 +45,23 @@ def init_cws_head(key, feature_dim: int, *, k: int, b_i: int,
     )
 
 
+def head_pipeline(params: CWSHeadParams, *, b_i: int,
+                  use_pallas: bool = False) -> FeaturePipeline:
+    spec = FeatureSpec(num_hashes=params.cws.num_hashes, b_i=b_i)
+    impl = registry.pallas_impl() if use_pallas else "reference"
+    return FeaturePipeline(params.cws, spec, impl=impl)
+
+
 def cws_head_logits(params: CWSHeadParams, features: Array, *,
                     b_i: int, use_pallas: bool = False) -> Array:
     """features: (B, D) -> logits (B, C). Nonnegativity enforced by ReLU
     (the min-max kernel is defined on nonnegative data)."""
     feats = jax.nn.relu(features.astype(jnp.float32))
-    if use_pallas:
-        from repro.kernels import ops
-        i_star, t_star = ops.cws_hash(feats, params.cws)
-    else:
-        i_star, t_star = cws_hash(feats, params.cws)
-    codes = encode(i_star, t_star, b_i=b_i)           # (B, k)
+    pipe = head_pipeline(params, b_i=b_i, use_pallas=use_pallas)
+    idx = pipe.features(feats)                        # (B, k) flat indices
     table = shard(params.table, None, "vocab", None)
-    gathered = jnp.take_along_axis(
-        table[None], codes[:, :, None, None].clip(0), axis=2)[:, :, 0, :]
-    return gathered.sum(axis=1) + params.bias
+    flat = table.reshape(-1, table.shape[-1])         # (k * 2^{b_i}, C)
+    return bag_logits(LinearParams(flat, params.bias), idx)
 
 
 def pool_hidden(hidden: Array) -> Array:

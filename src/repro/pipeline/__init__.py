@@ -1,0 +1,5 @@
+"""Unified featurization pipeline (CWS -> b-bit code -> embedding-bag
+indices) behind the kernel registry.  See featurize.py and DESIGN.md §6."""
+from repro.pipeline.featurize import FeatureSpec, FeaturePipeline
+
+__all__ = ["FeatureSpec", "FeaturePipeline"]

@@ -1,0 +1,223 @@
+"""The one featurization subsystem: CWS sampling -> b-bit encoding ->
+embedding-bag indices, as a single dispatchable pipeline.
+
+The paper's end-to-end recipe is a three-stage pipeline, but downstream
+learners only ever consume the final bit-truncated feature indices
+(b-bit minwise hashing's central observation).  ``FeaturePipeline``
+therefore exposes the fused artifact directly:
+
+    pipe = FeaturePipeline.create(key, dim, FeatureSpec(k=512, b_i=8))
+    idx  = pipe.features(x)          # (n, k) int32 into pipe.num_features
+
+backed by the registry-dispatched fused kernel (``cws_encode``: Mosaic on
+TPU, pure-JAX reference on CPU, Pallas interpreter for kernel-parity
+testing).  The staged composition (hash -> encode -> offsets) survives in
+two sanctioned places only: the registry's ``reference`` implementation
+and ``staged_reference`` below (the test oracle).
+
+Scale features (DESIGN.md §6):
+  * row-chunked streaming — ``features`` processes ``row_chunk`` rows per
+    kernel launch so peak memory is O(row_chunk * max(D, k)), independent
+    of n;
+  * buffer donation — each streamed chunk buffer is donated to its launch
+    (XLA reuses it for the output; no transient duplication);
+  * data-axis sharding — pass ``mesh=`` (see repro.launch.mesh) to
+    shard_map the launch over the ``data`` axis: rows split across
+    devices, CWS parameters replicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cws import CWSParams, make_cws_params, cws_hash_reference
+from repro.core.hashing import encode, feature_indices, hashed_dim
+from repro.kernels import ops, registry
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureSpec:
+    """What the downstream learner sees: k hashes, 2^{b_i+b_t} buckets each.
+
+    ``b_i = 0`` keeps i* in full (the paper's "0-bit" refers to t*);
+    ``b_t = 0`` discards t* entirely — the paper's proposed scheme, and the
+    one the fused kernel serves with zero t* traffic."""
+    num_hashes: int
+    b_i: int
+    b_t: int = 0
+
+    @property
+    def width(self) -> int:
+        return 1 << (self.b_i + self.b_t)
+
+    @property
+    def num_features(self) -> int:
+        return hashed_dim(self.num_hashes, self.b_i, self.b_t)
+
+
+class FeaturePipeline:
+    """CWS featurization bound to one (params, spec) pair.
+
+    ``impl`` pins a registry implementation name (``pallas``,
+    ``pallas-interpret``, ``reference``); None dispatches by backend
+    capability.  ``blocks`` pins (bn, bk, bd); None consults the autotune
+    table/heuristic per launch shape.
+    """
+
+    def __init__(self, params: CWSParams, spec: FeatureSpec, *,
+                 impl: Optional[str] = None,
+                 blocks: Optional[Tuple[int, int, int]] = None,
+                 row_chunk: int = 8192):
+        if spec.num_hashes > params.num_hashes:
+            raise ValueError(
+                f"spec asks for {spec.num_hashes} hashes but params carry "
+                f"only {params.num_hashes}")
+        self.params = params
+        self.spec = spec
+        self.impl = impl
+        self.blocks = blocks
+        self.row_chunk = row_chunk
+        self._donating_chunk_fn = None
+
+    @classmethod
+    def create(cls, key: Array, dim: int, spec: FeatureSpec,
+               **kw) -> "FeaturePipeline":
+        return cls(make_cws_params(key, dim, spec.num_hashes), spec, **kw)
+
+    @property
+    def num_features(self) -> int:
+        return self.spec.num_features
+
+    # -- single-launch building block ----------------------------------
+
+    def _launch(self, x: Array) -> Array:
+        bn, bk, bd = self.blocks or (None, None, None)
+        return ops.cws_encode(
+            x, self._sliced_params(), b_i=self.spec.b_i, b_t=self.spec.b_t,
+            bn=bn, bk=bk, bd=bd, impl=self._resolved_impl())
+
+    def _sliced_params(self) -> CWSParams:
+        if self.spec.num_hashes == self.params.num_hashes:
+            return self.params
+        return self.params.slice_hashes(0, self.spec.num_hashes)
+
+    # -- public API ----------------------------------------------------
+
+    def features(self, x: Array, *, mesh=None) -> Array:
+        """x (n, D) nonneg -> embedding-bag indices (n, k) int32 into
+        ``num_features``.  Streams in ``row_chunk`` row chunks; with a
+        ``mesh`` the launch is shard_mapped over its ``data`` axis."""
+        self._require_bucketed("features")
+        n = x.shape[0]
+        if n == 0:   # empty stream chunk: nothing to launch
+            return jnp.zeros((0, self.spec.num_hashes), jnp.int32)
+        sharded = functools.partial(self._features_sharded, mesh=mesh)
+        if n <= self.row_chunk:
+            return self._launch(x) if mesh is None else sharded(x)
+        # streamed: unsharded chunks go through the donating chunk fn
+        return self._features_streamed(x, None if mesh is None else sharded)
+
+    def hashes(self, x: Array):
+        """Staged stage-1 escape hatch for estimator sweeps that reuse one
+        hash pass across many (b_i, b_t) encodings: (i*, t*) each (n, k)."""
+        if x.shape[0] == 0:
+            z = jnp.zeros((0, self.spec.num_hashes), jnp.int32)
+            return z, z
+        bn, bk, bd = self.blocks or (None, None, None)
+        impl = self.impl
+        if impl is None and not registry.on_tpu():
+            impl = "reference"
+        return ops.cws_hash(x, self._sliced_params(), bn=bn, bk=bk, bd=bd,
+                            impl=impl)
+
+    def features_from_hashes(self, i_star: Array, t_star: Array) -> Array:
+        """Stage 2+3 on precomputed hashes (columns may be pre-sliced to a
+        k prefix; offsets follow the column count)."""
+        self._require_bucketed("features_from_hashes")
+        codes = encode(i_star, t_star, b_i=self.spec.b_i, b_t=self.spec.b_t)
+        return feature_indices(codes, b_i=self.spec.b_i, b_t=self.spec.b_t)
+
+    def codes(self, x: Array) -> Array:
+        """Per-hash codes WITHOUT feature offsets (collision estimators);
+        sentinel rows keep -1."""
+        i_star, t_star = self.hashes(x)
+        return encode(i_star, t_star, b_i=self.spec.b_i, b_t=self.spec.b_t)
+
+    def staged_reference(self, x: Array) -> Array:
+        """The unchunked staged oracle — tests compare ``features`` to this."""
+        i_star, t_star = cws_hash_reference(x, self._sliced_params())
+        return self.features_from_hashes(i_star, t_star)
+
+    def _require_bucketed(self, method: str) -> None:
+        """Embedding-bag expansion needs b_i >= 1: with b_i = 0 the i* part
+        is kept in full, so codes are unbounded by 2^{b_i+b_t} and flat
+        indices would silently collide/clip past ``num_features``.  b_i = 0
+        specs are for collision estimators — use ``codes``/``hashes``."""
+        if self.spec.b_i == 0:
+            raise ValueError(
+                f"{method} requires b_i >= 1 (b_i = 0 keeps i* in full, so "
+                f"indices are not bounded by num_features = "
+                f"{self.spec.num_features}); use .codes()/.hashes() for "
+                f"b_i = 0 estimator specs")
+
+    # -- streaming / sharding internals --------------------------------
+
+    def _chunk_fn(self):
+        """Jitted per-chunk launch with the chunk buffer donated (on TPU):
+        streaming never holds chunk + output beyond one launch.  On CPU the
+        int32 output can never alias the fp32 chunk, so donation would only
+        warn."""
+        if self._donating_chunk_fn is None:
+            donate = (0,) if registry.on_tpu() else ()
+            self._donating_chunk_fn = jax.jit(
+                lambda xc, params: self._launch_with(xc, params),
+                donate_argnums=donate)
+        return self._donating_chunk_fn
+
+    def _launch_with(self, x: Array, params: CWSParams) -> Array:
+        bn, bk, bd = self.blocks or registry.choose_blocks(
+            x.shape[0], x.shape[1], self.spec.num_hashes)
+        fn = registry.resolve("cws_encode", self._resolved_impl()).fn
+        return fn(x, params, b_i=self.spec.b_i, b_t=self.spec.b_t,
+                  bn=bn, bk=bk, bd=bd)
+
+    def _resolved_impl(self) -> str:
+        return self.impl or registry.auto_impl("cws_encode")
+
+    def _features_streamed(self, x: Array, launch=None) -> Array:
+        """Chunked launches keep peak memory at O(row_chunk * max(D, k))
+        on every path — ``launch`` overrides the per-chunk callable (the
+        sharded case); default is the donating jitted chunk fn."""
+        n = x.shape[0]
+        params = self._sliced_params()
+        fn = launch or (lambda c: self._chunk_fn()(c, params))
+        outs = []
+        for lo in range(0, n, self.row_chunk):
+            chunk = jax.lax.slice_in_dim(x, lo, min(lo + self.row_chunk, n),
+                                         axis=0)
+            outs.append(fn(chunk))
+        return jnp.concatenate(outs, axis=0)
+
+    def _features_sharded(self, x: Array, mesh) -> Array:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        ndev = mesh.shape["data"]
+        n = x.shape[0]
+        pad = (-n) % ndev
+        xp = jnp.pad(x, ((0, pad), (0, 0)))   # all-zero pad rows -> bucket 0
+        params = self._sliced_params()
+        f = shard_map(
+            lambda xs, ps: self._launch_with(xs, ps),
+            mesh=mesh,
+            in_specs=(P("data", None), P(None, None)),
+            out_specs=P("data", None),
+            check_rep=False,
+        )
+        return f(xp, params)[:n]

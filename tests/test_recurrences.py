@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip without it
 from hypothesis import given, settings, strategies as st
 
 from repro.models.config import ModelConfig, SSMCfg

@@ -1,5 +1,7 @@
 """End-to-end trainer integration on CPU: loss goes down, checkpoints
-restore bit-exactly, restart-resume reproduces the uninterrupted run."""
+restore bit-exactly, restart-resume reproduces the uninterrupted run.
+
+Marked ``slow`` (~70s total): the default CI job runs -m "not slow"."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,8 @@ from repro.data.loader import TokenBatchLoader
 from repro.launch.train import build_trainer
 from repro.training import TrainHparams
 from repro.training.trainer import init_train_state, make_train_step
+
+pytestmark = pytest.mark.slow
 
 
 @pytest.fixture(scope="module")
