@@ -1,9 +1,11 @@
 """CWS hashing + min-max Gram throughput: Pallas kernel (interpret mode on
 this CPU container — the BlockSpec tiling is what ships to TPU), the
 chunked pure-JAX path, and the naive oracle. Also the regenerated-RNG
-variant (beyond-paper HBM optimization, DESIGN.md §7) and the FUSED
+variant (zero-parameter-traffic CWS, DESIGN.md §7) and the FUSED
 featurization pipeline (cws_encode) against its staged composition —
-emitted to BENCH_cws_fused.json so future PRs can track the trajectory.
+emitted to BENCH_cws_fused.json, with the stored-vs-regen trajectory
+(wall-clock + modeled bytes moved; parameter input traffic is zero on the
+regen path) in BENCH_cws_regen.json.
 
 Wall-times here are CPU numbers — meaningful relative to each other for
 the JAX paths; the interpret-mode Pallas time measures the interpreter,
@@ -80,6 +82,82 @@ def bench_fused_vs_staged(fast: bool) -> dict:
     return results
 
 
+def _ceil_to(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def _tile_traffic(n, d, k, bn, bk, bd, *, stored: bool):
+    """Modeled HBM input bytes for one fused featurization launch at the
+    given blocks (padded grid): x tiles are re-read once per hash block,
+    stored parameters once per row block; the regen path reads NO
+    parameter bytes (they are derived in-kernel, DESIGN.md §7)."""
+    np_, dp_, kp_ = _ceil_to(n, bn), _ceil_to(d, bd), _ceil_to(k, bk)
+    x_bytes = (kp_ // bk) * 4 * np_ * dp_
+    param_bytes = (np_ // bn) * 12 * dp_ * kp_ if stored else 0
+    return {"x_bytes": x_bytes, "param_bytes": param_bytes,
+            "total_in_bytes": x_bytes + param_bytes}
+
+
+def bench_stored_vs_regen(fast: bool) -> dict:
+    """Stored-parameter vs regenerated-parameter (zero-parameter-traffic)
+    fused featurization: wall-clock on the backend's fast path plus the
+    modeled bytes-moved at the families' chosen blocks — emitted to
+    BENCH_cws_regen.json so the trajectory accumulates per PR.
+
+    Per (BN, BK) tile the stored kernel reads 4·BN·BD + 12·BD·BK input
+    bytes and the regen kernel 4·BN·BD: parameter input traffic is
+    identically zero, which is the whole point.
+    """
+    grid = [(256, 128, 128)] if fast else [(512, 256, 256),
+                                           (1024, 512, 512),
+                                           (2048, 512, 1024)]
+    b_i, b_t = 8, 0
+    results = {"b_i": b_i, "b_t": b_t, "backend": registry.backend(),
+               "grid": {}}
+    for (n, d, k) in grid:
+        x = rand_nonneg(jax.random.PRNGKey(n + k), (n, d))
+        key = jax.random.PRNGKey(11)
+        spec = FeatureSpec(k, b_i=b_i, b_t=b_t)
+        stored = FeaturePipeline.create(key, d, spec)
+        regen = FeaturePipeline.create_regen(key, d, spec)
+
+        _, us_stored = timed(lambda: stored.features(x), repeats=3)
+        _, us_regen = timed(lambda: regen.features(x), repeats=3)
+
+        sb = registry.choose_blocks(n, d, k, op="cws")
+        rb = registry.choose_blocks(n, d, k, op="cws_rng")
+        entry = {
+            "stored": {"wall_us": round(us_stored, 1), "blocks": list(sb),
+                       **_tile_traffic(n, d, k, *sb, stored=True)},
+            "regen": {"wall_us": round(us_regen, 1), "blocks": list(rb),
+                      **_tile_traffic(n, d, k, *rb, stored=False)},
+        }
+        entry["input_traffic_ratio"] = round(
+            entry["stored"]["total_in_bytes"] /
+            max(entry["regen"]["total_in_bytes"], 1), 3)
+        key_s = f"n{n}_d{d}_k{k}"
+        results["grid"][key_s] = entry
+        emit(f"cws_regen/{key_s}", us_regen,
+             f"stored={us_stored:.0f}us param_bytes 0 vs "
+             f"{entry['stored']['param_bytes']} "
+             f"(in-traffic x{entry['input_traffic_ratio']})")
+
+    # interpret-mode kernel-body parity + cost at a tiny shape: the regen
+    # kernel must agree bit-exactly with its reference impl
+    n, d, k = 64, 128, 64
+    x = rand_nonneg(jax.random.PRNGKey(3), (n, d))
+    key = jax.random.PRNGKey(12)
+    out_ref = ops.cws_encode_rng(x, key, k, b_i=b_i, impl="reference")
+    out_int, us = timed(lambda: ops.cws_encode_rng(
+        x, key, k, b_i=b_i, bn=64, bk=64, bd=64, interpret=True), repeats=1)
+    assert (out_int == out_ref).all(), "regen kernel != counter oracle"
+    emit("cws_regen/pallas_interpret(64x128x64)", us,
+         "kernel-body correctness path, bit-exact vs oracle")
+    results["interpret_us_64x128x64"] = round(us, 1)
+    save_json("BENCH_cws_regen", results)
+    return results
+
+
 def run(fast: bool = False):
     n, d, k = (256, 256, 256) if fast else (1024, 512, 512)
     x = rand_nonneg(jax.random.PRNGKey(0), (n, d))
@@ -104,6 +182,7 @@ def run(fast: bool = False):
     emit("cws/pallas_interpret(64x128x64)", us, "correctness-path only")
 
     bench_fused_vs_staged(fast)
+    bench_stored_vs_regen(fast)
 
     # min-max Gram: pallas-tiling ref vs pure-jnp oracle
     m = 256 if fast else 512
@@ -115,4 +194,8 @@ def run(fast: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes (CI bench-smoke job)")
+    run(fast=ap.parse_args().smoke)

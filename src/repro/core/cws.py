@@ -158,33 +158,45 @@ def cws_hash(x: Array, params: CWSParams, *, row_block: int = 128,
 # regenerated-parameter variant (beyond-paper memory optimization)
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnames=("num_hashes", "hash_block",
+                                             "row_block"))
 def cws_hash_regen(x: Array, key: Array, num_hashes: int, *,
                    hash_block: int = 128, row_block: int = 256):
     """CWS with (r, c, beta) regenerated per hash-block from a counter key.
 
     The paper stores three D x k fp32 matrices (3*D*k*4 bytes of HBM reads
-    per data block). Here each hash block's parameters are derived on the
-    fly from a counter-based PRNG key, so the parameter working set is
-    O(D * hash_block) and never round-trips HBM. Identical statistics;
-    different (but equally valid) random draws than `make_cws_params`.
+    per data block).  Here each hash block's parameters are derived on the
+    fly from the counter-based spec in :mod:`repro.core.regen` — the
+    parameter working set is O(D * hash_block) and never round-trips HBM.
+
+    This is the ORACLE for the rng Pallas kernels
+    (``cws_hash_rng_pallas`` / ``cws_encode_rng_pallas``): both evaluate
+    the same elementwise (key, d, k) -> params map, so (i*, t*) are
+    bit-identical per the §3 contract, and the result is independent of
+    ``hash_block``/``row_block`` (tile-order independence of the counter
+    stream).  Identical statistics to `make_cws_params`; different (but
+    equally valid) draws.
     """
+    from repro.core.regen import key_words, regen_tile
+
     n, d = x.shape
     x = x.astype(jnp.float32)
     logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+    hash_block = min(hash_block, num_hashes)
+    row_block = min(row_block, n)
     pad_k = (-num_hashes) % hash_block
     n_kb = (num_hashes + pad_k) // hash_block
+    k0, k1 = key_words(key)
 
-    keys = jax.random.split(key, n_kb)
-
-    def per_hashblock(kb_key):
-        p = make_cws_params(kb_key, d, hash_block)
+    def per_hashblock(kb):
+        p = CWSParams(*regen_tile(k0, k1, 0, kb * hash_block, d, hash_block))
         pad_n = (-n) % row_block
         lu = jnp.pad(logu, ((0, pad_n), (0, 0)), constant_values=-jnp.inf)
         blocks = lu.reshape(-1, row_block, d)
         i_s, t_s = jax.lax.map(lambda b: _cws_block(b, p), blocks)
         return i_s.reshape(-1, hash_block)[:n], t_s.reshape(-1, hash_block)[:n]
 
-    i_star, t_star = jax.lax.map(per_hashblock, keys)
+    i_star, t_star = jax.lax.map(per_hashblock, jnp.arange(n_kb, dtype=jnp.int32))
     i_star = jnp.transpose(i_star, (1, 0, 2)).reshape(n, -1)[:, :num_hashes]
     t_star = jnp.transpose(t_star, (1, 0, 2)).reshape(n, -1)[:, :num_hashes]
     return i_star, t_star

@@ -42,9 +42,10 @@ def _dual_cd_binary(K: Array, y: Array, C: float, sweeps: int) -> Array:
         grad = g[i] - 1.0
         new_ai = jnp.maximum(alpha[i] - grad / Qbar_diag[i], 0.0)
         d = new_ai - alpha[i]
-        # column i of Qbar (off-diag part): y_i * y * K[:, i]; diag handled via d
-        g = g + d * (y[i] * y * K[:, i] + (1.0 / (2.0 * C)) *
-                     (jnp.arange(n) == i))
+        # column i of Qbar: y_i * y * K[:, i] plus the I/(2C) diagonal —
+        # applied as a scatter-add so no n-vector one-hot is materialized
+        g = g + d * (y[i] * y * K[:, i])
+        g = g.at[i].add(d / (2.0 * C))
         alpha = alpha.at[i].set(new_ai)
         return alpha, g
 

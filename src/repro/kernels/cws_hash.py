@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.regen import key_words, regen_tile
+
 NEG_SENTINEL = -1
 
 
@@ -119,16 +121,23 @@ def _cws_encode_kernel(x_ref, r_ref, logc_ref, beta_ref, idx_ref, *scratch,
 
     @pl.when(d_step == n_d_steps - 1)
     def _emit():
-        i = best_i[...]
-        code = i if b_i == 0 else jnp.bitwise_and(i, (1 << b_i) - 1)
-        if b_t:
-            t = jnp.clip(best_t[...], -2 ** 30, 2 ** 30).astype(jnp.int32)
-            code = code * (1 << b_t) + jnp.bitwise_and(t, (1 << b_t) - 1)
-        code = jnp.where(i < 0, 0, code)           # sentinel -> bucket 0
-        width = jnp.int32(1 << (b_i + b_t))
-        col = jax.lax.broadcasted_iota(jnp.int32, code.shape, 1)
-        hash_id = hash_block * bk + col            # global hash index
-        idx_ref[...] = hash_id * width + code
+        idx_ref[...] = _encode_emit(best_i[...],
+                                    best_t[...] if b_t else None,
+                                    hash_block, bk, b_i, b_t)
+
+
+def _encode_emit(i, best_t, hash_block, bk, b_i, b_t):
+    """b-bit code + sentinel handling + per-hash offset: the shared emit
+    step of the fused featurization kernels (stored and rng variants)."""
+    code = i if b_i == 0 else jnp.bitwise_and(i, (1 << b_i) - 1)
+    if b_t:
+        t = jnp.clip(best_t, -2 ** 30, 2 ** 30).astype(jnp.int32)
+        code = code * (1 << b_t) + jnp.bitwise_and(t, (1 << b_t) - 1)
+    code = jnp.where(i < 0, 0, code)               # sentinel -> bucket 0
+    width = jnp.int32(1 << (b_i + b_t))
+    col = jax.lax.broadcasted_iota(jnp.int32, code.shape, 1)
+    hash_id = hash_block * bk + col                # global hash index
+    return hash_id * width + code
 
 
 def _pad_operands(x, r, log_c, beta, bn, bk, bd):
@@ -225,3 +234,189 @@ def cws_encode_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
         interpret=interpret,
     )(xp, rp, lcp, bep)
     return idx[:n, :k]
+
+
+# ---------------------------------------------------------------------------
+# zero-parameter-traffic variants: (r, log_c, beta) regenerated in-kernel
+# ---------------------------------------------------------------------------
+#
+# The three (D, k) parameter operands disappear; each grid step derives its
+# (BD, BK) parameter tile from the counter-based threefry spec
+# (repro.core.regen) keyed on the GLOBAL (d, hash) coordinates — so tiles
+# are order-independent and bit-identical to the `cws_hash_regen` oracle.
+# Input traffic per (row, hash) tile drops from 4·BN·BD + 12·BD·BK bytes
+# to 4·BN·BD (DESIGN.md §7); the price is ~3 threefry evaluations per
+# (d, hash) element per row-block sweep, regenerated into VMEM scratch at
+# every grid step (the scratch tile is reused as the accumulation loop's
+# parameter refs, so the VPU loop itself is unchanged).
+
+
+def _regen_step(key_ref, d_step, bd, bk, r_s, c_s, b_s):
+    """Fill the (BD, BK) parameter scratch for this grid step from the
+    counter stream at global offsets (d_step*BD, hash_block*BK)."""
+    r, lc, be = regen_tile(key_ref[0], key_ref[1],
+                           d_step * bd, pl.program_id(1) * bk, bd, bk)
+    r_s[...] = r
+    c_s[...] = lc
+    b_s[...] = be
+
+
+def _cws_hash_rng_kernel(x_ref, key_ref, istar_ref, tstar_ref,
+                         r_s, c_s, b_s, best_a, best_i, best_t,
+                         *, bd: int, n_d_steps: int, bk: int):
+    d_step = pl.program_id(2)
+
+    @pl.when(d_step == 0)
+    def _init():
+        best_a[...] = jnp.full_like(best_a[...], jnp.inf)
+        best_i[...] = jnp.full_like(best_i[...], NEG_SENTINEL)
+        best_t[...] = jnp.zeros_like(best_t[...])
+
+    _regen_step(key_ref, d_step, bd, bk, r_s, c_s, b_s)
+    x = x_ref[...]
+    logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+
+    a1, i1, t1 = _accum_loop(logu, r_s, c_s, b_s, d_step, bd,
+                             (best_a[...], best_i[...], best_t[...]))
+    best_a[...] = a1
+    best_i[...] = i1
+    best_t[...] = t1
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _emit():
+        istar_ref[...] = best_i[...]
+        tstar_ref[...] = jnp.clip(best_t[...], -2 ** 30, 2 ** 30).astype(jnp.int32)
+
+
+def _cws_encode_rng_kernel(x_ref, key_ref, idx_ref, r_s, c_s, b_s, *scratch,
+                           bd: int, n_d_steps: int, b_i: int, b_t: int,
+                           bk: int):
+    d_step = pl.program_id(2)
+    hash_block = pl.program_id(1)
+    best_a, best_i = scratch[0], scratch[1]
+    best_t = scratch[2] if b_t else None
+
+    @pl.when(d_step == 0)
+    def _init():
+        best_a[...] = jnp.full_like(best_a[...], jnp.inf)
+        best_i[...] = jnp.full_like(best_i[...], NEG_SENTINEL)
+        if b_t:
+            best_t[...] = jnp.zeros_like(best_t[...])
+
+    _regen_step(key_ref, d_step, bd, bk, r_s, c_s, b_s)
+    x = x_ref[...]
+    logu = jnp.where(x > 0, jnp.log(jnp.maximum(x, 1e-38)), -jnp.inf)
+
+    carry = (best_a[...], best_i[...]) + ((best_t[...],) if b_t else ())
+    out = _accum_loop(logu, r_s, c_s, b_s, d_step, bd, carry)
+    best_a[...] = out[0]
+    best_i[...] = out[1]
+    if b_t:
+        best_t[...] = out[2]
+
+    @pl.when(d_step == n_d_steps - 1)
+    def _emit():
+        idx_ref[...] = _encode_emit(best_i[...],
+                                    best_t[...] if b_t else None,
+                                    hash_block, bk, b_i, b_t)
+
+
+def _rng_setup(x, num_hashes, bn, bk, bd):
+    """Pad x, size the padded (n, k) output grid, build the rng in_specs
+    (x tile + whole-key in SMEM)."""
+    n, d = x.shape
+    bn, bk, bd = min(bn, n), min(bk, num_hashes), min(bd, d)
+    pad_n, pad_d = (-n) % bn, (-d) % bd
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_n), (0, pad_d)))
+    kp_ = num_hashes + ((-num_hashes) % bk)
+    in_specs = [
+        pl.BlockSpec((bn, bd), lambda i, j, s: (i, s)),
+        pl.BlockSpec(memory_space=pltpu.SMEM),
+    ]
+    out_spec = pl.BlockSpec((bn, bk), lambda i, j, s: (i, j))
+    return xp, kp_, bn, bk, bd, in_specs, out_spec
+
+
+def _param_scratch(bd, bk):
+    return [pltpu.VMEM((bd, bk), jnp.float32),   # regenerated r
+            pltpu.VMEM((bd, bk), jnp.float32),   # regenerated log_c
+            pltpu.VMEM((bd, bk), jnp.float32)]   # regenerated beta
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_hashes", "bn", "bk", "bd",
+                                    "interpret"))
+def cws_hash_rng_pallas(x: jax.Array, key: jax.Array, num_hashes: int, *,
+                        bn: int = 128, bk: int = 128, bd: int = 256,
+                        interpret: bool = False):
+    """Zero-parameter-traffic CWS: x (n, D) nonneg + PRNG key ->
+    (i*, t*) each (n, num_hashes) int32.  Bit-identical to
+    ``cws_hash_regen(x, key, num_hashes)``."""
+    n, d = x.shape
+    k0, k1 = key_words(key)
+    kw = jnp.stack([k0, k1])
+    xp, kp_, bn, bk, bd, in_specs, out_spec = _rng_setup(
+        x, num_hashes, bn, bk, bd)
+    np_, dp_ = xp.shape
+    n_d_steps = dp_ // bd
+
+    kernel = functools.partial(_cws_hash_rng_kernel, bd=bd,
+                               n_d_steps=n_d_steps, bk=bk)
+    i_star, t_star = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
+                   jax.ShapeDtypeStruct((np_, kp_), jnp.int32)],
+        scratch_shapes=_param_scratch(bd, bk) + [
+            pltpu.VMEM((bn, bk), jnp.float32),   # best log_a
+            pltpu.VMEM((bn, bk), jnp.int32),     # best index
+            pltpu.VMEM((bn, bk), jnp.float32),   # best t (cast on emit)
+        ],
+        interpret=interpret,
+    )(xp, kw)
+    return i_star[:n, :num_hashes], t_star[:n, :num_hashes]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_hashes", "b_i", "b_t", "bn", "bk",
+                                    "bd", "interpret"))
+def cws_encode_rng_pallas(x: jax.Array, key: jax.Array, num_hashes: int, *,
+                          b_i: int, b_t: int = 0, bn: int = 128,
+                          bk: int = 128, bd: int = 256,
+                          interpret: bool = False) -> jax.Array:
+    """Fused zero-parameter-traffic featurization: x (n, D) nonneg + PRNG
+    key -> embedding-bag indices (n, num_hashes) int32 into the
+    num_hashes * 2^{b_i+b_t} feature space.
+
+    Bit-exact vs ``feature_indices(encode(cws_hash_regen(...)))`` with a
+    single HBM output array, no (i*, t*) intermediates, and NO parameter
+    operands at all — the only HBM input is x.
+    """
+    n, d = x.shape
+    k0, k1 = key_words(key)
+    kw = jnp.stack([k0, k1])
+    xp, kp_, bn, bk, bd, in_specs, out_spec = _rng_setup(
+        x, num_hashes, bn, bk, bd)
+    np_, dp_ = xp.shape
+    n_d_steps = dp_ // bd
+
+    scratch = _param_scratch(bd, bk) + [
+        pltpu.VMEM((bn, bk), jnp.float32),       # best log_a
+        pltpu.VMEM((bn, bk), jnp.int32)]         # best index
+    if b_t:
+        scratch.append(pltpu.VMEM((bn, bk), jnp.float32))    # best t
+
+    kernel = functools.partial(_cws_encode_rng_kernel, bd=bd,
+                               n_d_steps=n_d_steps, b_i=b_i, b_t=b_t, bk=bk)
+    idx = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, kp_), jnp.int32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, kw)
+    return idx[:n, :num_hashes]

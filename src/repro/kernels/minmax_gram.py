@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry
+
 
 def _minsum_kernel(x_ref, y_ref, out_ref, acc, *, bd: int, n_d_steps: int):
     d_step = pl.program_id(2)
@@ -39,11 +41,30 @@ def _minsum_kernel(x_ref, y_ref, out_ref, acc, *, bd: int, n_d_steps: int):
         out_ref[...] = acc[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
-def min_sum_pallas(x: jax.Array, y: jax.Array, *, bm: int = 128,
-                   bn: int = 128, bd: int = 256,
+def _resolve_blocks(x, y, bm, bn, bd):
+    """Fill unset block sizes from ``registry.choose_blocks`` (the
+    "min_sum" family: autotune table, then the x+y+acc VMEM model).
+    Runs OUTSIDE jit so a table update (registry.load_block_table) takes
+    effect on the next call instead of being baked into a cached trace."""
+    m, d = x.shape
+    n = y.shape[0]
+    if bm is None or bn is None or bd is None:
+        hm, hn, hd = registry.choose_blocks(m, d, n, op="min_sum")
+        bm, bn, bd = bm or hm, bn or hn, bd or hd
+    return bm, bn, bd
+
+
+def min_sum_pallas(x: jax.Array, y: jax.Array, *, bm: int | None = None,
+                   bn: int | None = None, bd: int | None = None,
                    interpret: bool = False) -> jax.Array:
     """x: (m, D), y: (n, D) nonneg -> (m, n) fp32 min-sums."""
+    bm, bn, bd = _resolve_blocks(x, y, bm, bn, bd)
+    return _min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
+def _min_sum_pallas(x: jax.Array, y: jax.Array, *, bm: int, bn: int,
+                    bd: int, interpret: bool = False) -> jax.Array:
     m, d = x.shape
     n = y.shape[0]
     bm, bn, bd = min(bm, m), min(bn, n), min(bd, d)
@@ -69,12 +90,19 @@ def min_sum_pallas(x: jax.Array, y: jax.Array, *, bm: int = 128,
     return out[:m, :n]
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
-def minmax_gram_pallas(x: jax.Array, y: jax.Array, *, bm: int = 128,
-                       bn: int = 128, bd: int = 256,
+def minmax_gram_pallas(x: jax.Array, y: jax.Array, *, bm: int | None = None,
+                       bn: int | None = None, bd: int | None = None,
                        interpret: bool = False) -> jax.Array:
+    bm, bn, bd = _resolve_blocks(x, y, bm, bn, bd)
+    return _minmax_gram_pallas(x, y, bm=bm, bn=bn, bd=bd,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bd", "interpret"))
+def _minmax_gram_pallas(x: jax.Array, y: jax.Array, *, bm: int, bn: int,
+                        bd: int, interpret: bool = False) -> jax.Array:
     x = jnp.maximum(x.astype(jnp.float32), 0.0)
     y = jnp.maximum(y.astype(jnp.float32), 0.0)
-    mins = min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
+    mins = _min_sum_pallas(x, y, bm=bm, bn=bn, bd=bd, interpret=interpret)
     maxs = jnp.sum(x, -1)[:, None] + jnp.sum(y, -1)[None, :] - mins
     return mins / jnp.maximum(maxs, 1e-30)

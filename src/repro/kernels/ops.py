@@ -20,7 +20,9 @@ from repro.core import cws as core_cws
 from repro.core import hashing as core_hashing
 from repro.kernels import ref
 from repro.kernels import registry
-from repro.kernels.cws_hash import cws_hash_pallas, cws_encode_pallas
+from repro.kernels.cws_hash import (cws_hash_pallas, cws_encode_pallas,
+                                    cws_hash_rng_pallas,
+                                    cws_encode_rng_pallas)
 from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
 
 
@@ -70,6 +72,50 @@ def _cws_encode_interp(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
 def _cws_encode_ref(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
     # the staged composition, kept in ONE place as the semantic definition
     i_star, t_star = _cws_hash_ref(x, params, bn=bn, bk=bk, bd=bd)
+    codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
+    return core_hashing.feature_indices(codes, b_i=b_i, b_t=b_t)
+
+
+# --- zero-parameter-traffic (regenerated-RNG) featurization family -------
+#
+# State is a PRNG key instead of CWSParams: every impl derives (r, log_c,
+# beta) from the counter spec in repro.core.regen, so all three are
+# bit-identical (DESIGN.md §7).
+
+@registry.register("cws_hash_rng", "pallas", requires=("tpu",))
+def _cws_hash_rng_tpu(x, key, num_hashes, *, bn, bk, bd):
+    return cws_hash_rng_pallas(x, key, num_hashes, bn=bn, bk=bk, bd=bd,
+                               interpret=False)
+
+
+@registry.register("cws_hash_rng", "pallas-interpret")
+def _cws_hash_rng_interp(x, key, num_hashes, *, bn, bk, bd):
+    return cws_hash_rng_pallas(x, key, num_hashes, bn=bn, bk=bk, bd=bd,
+                               interpret=True)
+
+
+@registry.register("cws_hash_rng", "reference")
+def _cws_hash_rng_ref(x, key, num_hashes, *, bn, bk, bd):
+    return core_cws.cws_hash_regen(x, key, num_hashes, row_block=max(bn, 8),
+                                   hash_block=max(bk, 8))
+
+
+@registry.register("cws_encode_rng", "pallas", requires=("tpu",))
+def _cws_encode_rng_tpu(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_rng_pallas(x, key, num_hashes, b_i=b_i, b_t=b_t,
+                                 bn=bn, bk=bk, bd=bd, interpret=False)
+
+
+@registry.register("cws_encode_rng", "pallas-interpret")
+def _cws_encode_rng_interp(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_rng_pallas(x, key, num_hashes, b_i=b_i, b_t=b_t,
+                                 bn=bn, bk=bk, bd=bd, interpret=True)
+
+
+@registry.register("cws_encode_rng", "reference")
+def _cws_encode_rng_ref(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
+    i_star, t_star = _cws_hash_rng_ref(x, key, num_hashes, bn=bn, bk=bk,
+                                       bd=bd)
     codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
     return core_hashing.feature_indices(codes, b_i=b_i, b_t=b_t)
 
@@ -142,12 +188,37 @@ def cws_encode(x: jax.Array, params: CWSParams, *, b_i: int, b_t: int = 0,
     return fn(x, params, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
 
 
+def cws_hash_rng(x: jax.Array, key: jax.Array, num_hashes: int, *,
+                 bn: int | None = None, bk: int | None = None,
+                 bd: int | None = None, interpret: bool | None = None,
+                 impl: str | None = None):
+    """Zero-parameter-traffic CWS: x (n, D) nonneg + PRNG key ->
+    (i*, t*) each (n, num_hashes) int32; params regenerated in-kernel."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], num_hashes,
+                         bn, bk, bd, op="cws_rng")
+    fn = registry.resolve("cws_hash_rng", _impl_name(interpret, impl)).fn
+    return fn(x, key, num_hashes, bn=bn, bk=bk, bd=bd)
+
+
+def cws_encode_rng(x: jax.Array, key: jax.Array, num_hashes: int, *,
+                   b_i: int, b_t: int = 0, bn: int | None = None,
+                   bk: int | None = None, bd: int | None = None,
+                   interpret: bool | None = None,
+                   impl: str | None = None) -> jax.Array:
+    """Fused zero-parameter-traffic featurization: x (n, D) nonneg + PRNG
+    key -> embedding-bag indices (n, num_hashes) int32 (DESIGN.md §7)."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], num_hashes,
+                         bn, bk, bd, op="cws_rng")
+    fn = registry.resolve("cws_encode_rng", _impl_name(interpret, impl)).fn
+    return fn(x, key, num_hashes, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
+
+
 def minmax_gram(x: jax.Array, y: jax.Array, *, bm: int | None = None,
                 bn: int | None = None, bd: int | None = None,
                 interpret: bool | None = None,
                 impl: str | None = None) -> jax.Array:
     bm_, bn_, bd_ = _blocks(x.shape[0], x.shape[1], y.shape[0],
-                            bm, bn, bd, op="gram")
+                            bm, bn, bd, op="min_sum")
     fn = registry.resolve("minmax_gram", _impl_name(interpret, impl)).fn
     return fn(x, y, bm=bm_, bn=bn_, bd=bd_)
 
@@ -157,7 +228,7 @@ def min_sum(x: jax.Array, y: jax.Array, *, bm: int | None = None,
             interpret: bool | None = None,
             impl: str | None = None) -> jax.Array:
     bm_, bn_, bd_ = _blocks(x.shape[0], x.shape[1], y.shape[0],
-                            bm, bn, bd, op="gram")
+                            bm, bn, bd, op="min_sum")
     fn = registry.resolve("min_sum", _impl_name(interpret, impl)).fn
     return fn(x, y, bm=bm_, bn=bn_, bd=bd_)
 

@@ -1,7 +1,8 @@
 """Kernel implementation registry with backend-capability dispatch.
 
-Every logical op (``cws_hash``, ``cws_encode``, ``minmax_gram``,
-``min_sum``) has named implementations:
+Every logical op (``cws_hash``, ``cws_encode``, ``cws_hash_rng``,
+``cws_encode_rng``, ``minmax_gram``, ``min_sum``) has named
+implementations:
 
   * ``pallas``            — the Mosaic kernel, requires a TPU backend;
   * ``pallas-interpret``  — the same kernel body through the Pallas
@@ -25,6 +26,8 @@ call sites.
 from __future__ import annotations
 
 import dataclasses
+import json
+import pathlib
 from typing import Callable, Dict, Tuple
 
 import jax
@@ -32,7 +35,8 @@ import jax
 __all__ = [
     "KernelImpl", "register", "resolve", "impl_names", "backend",
     "on_tpu", "auto_impl", "pallas_impl", "choose_blocks",
-    "update_block_table", "BLOCK_TABLE",
+    "update_block_table", "save_block_table", "load_block_table",
+    "block_candidates", "vmem_bytes", "table_key", "BLOCK_TABLE",
 ]
 
 
@@ -105,11 +109,17 @@ def resolve(op: str, impl: str | None = None) -> KernelImpl:
 # ---------------------------------------------------------------------------
 
 # Tuned entries keyed on (op_family, pow2-bucketed (n, D, k)) ->
-# (bn, bk, bd).  The family ("cws": rows x dims x hashes; "gram":
-# rows x dims x cols) keeps CWS-measured entries from silently applying
-# to the gram kernels, whose axis meanings and VMEM footprint differ.
+# (bn, bk, bd).  Families keep measured entries from silently applying to
+# kernels whose axis meanings and VMEM footprint differ:
+#   "cws"     — stored-param CWS (rows x dims x hashes);
+#   "cws_rng" — regenerated-param CWS (same grid, params live in scratch
+#               and cost VPU work instead of HBM reads, so the measured
+#               optimum can differ — typically larger bn, since the
+#               regeneration cost amortizes over the row block);
+#   "min_sum" — the gram kernels (rows x dims x cols).
 # Seeded from the VMEM model below at the shapes the benchmarks exercise;
-# TPU autotune sweeps append to this via update_block_table.
+# autotune sweeps (tools/autotune_blocks.py) replace entries with measured
+# winners via update_block_table / load_block_table.
 BLOCK_TABLE: Dict[Tuple[str, int, int, int], Tuple[int, int, int]] = {
     ("cws", 256, 512, 512):    (128, 128, 512),
     ("cws", 1024, 512, 512):   (128, 128, 512),
@@ -119,10 +129,58 @@ BLOCK_TABLE: Dict[Tuple[str, int, int, int], Tuple[int, int, int]] = {
 
 _VMEM_BUDGET = 8 * 2 ** 20   # conservative half of ~16MB/core
 
+# Per-family fp32 working-set models (b1, b2, bd) -> bytes.  Axis naming
+# follows choose_blocks: b1 tiles the first problem axis (rows), b2 the
+# third (hashes/cols), bd the contraction/dims axis.
+_VMEM_MODELS: Dict[str, Callable[[int, int, int], int]] = {
+    # x tile + 3 param tiles + 3 accumulators + 2 output tiles
+    "cws": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk + 5 * bn * bk),
+    # x tile + 3 regenerated param tiles (scratch, single-buffered — no
+    # pipelined second copy) + 3 accumulators + 2 output tiles
+    "cws_rng": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk + 5 * bn * bk),
+    # x tile + y tile + accumulator + output tile
+    "min_sum": lambda bm, bn, bd: 4 * (bm * bd + bn * bd + 2 * bm * bn),
+}
+_FAMILY_ALIASES = {"gram": "min_sum", "cws_hash": "cws", "cws_encode": "cws",
+                   "cws_hash_rng": "cws_rng", "cws_encode_rng": "cws_rng",
+                   "minmax_gram": "min_sum"}
+
+
+def _family(op: str) -> str:
+    return _FAMILY_ALIASES.get(op, op)
+
+
+def vmem_bytes(b1: int, b2: int, bd: int, *, op: str = "cws") -> int:
+    return _VMEM_MODELS[_family(op)](b1, b2, bd)
+
 
 def update_block_table(entries: Dict[Tuple[str, int, int, int],
                                      Tuple[int, int, int]]) -> None:
-    BLOCK_TABLE.update(entries)
+    BLOCK_TABLE.update({(_family(op), n, d, k): tuple(v)
+                        for (op, n, d, k), v in entries.items()})
+
+
+def save_block_table(path, entries: Dict | None = None) -> None:
+    """Persist (a subset of) the block table as JSON: "family:n:d:k" ->
+    [b1, b2, bd].  The file round-trips through load_block_table, so a
+    measured TPU sweep can be checked in and replayed on any host."""
+    entries = BLOCK_TABLE if entries is None else entries
+    obj = {f"{op}:{n}:{d}:{k}": list(v)
+           for (op, n, d, k), v in sorted(entries.items())}
+    pathlib.Path(path).write_text(json.dumps(obj, indent=1))
+
+
+def load_block_table(path) -> Dict[Tuple[str, int, int, int],
+                                   Tuple[int, int, int]]:
+    """Load a save_block_table JSON file into BLOCK_TABLE; returns the
+    parsed entries."""
+    obj = json.loads(pathlib.Path(path).read_text())
+    entries = {}
+    for key, v in obj.items():
+        op, n, d, k = key.split(":")
+        entries[(op, int(n), int(d), int(k))] = tuple(int(x) for x in v)
+    update_block_table(entries)
+    return entries
 
 
 def _pow2_at_most(v: int, lo: int, hi: int) -> int:
@@ -139,37 +197,62 @@ def _bucket(v: int) -> int:
     return p
 
 
-def _vmem_bytes(bn: int, bk: int, bd: int) -> int:
-    # x tile + 3 param tiles + 3 scratch accumulators + 2 output tiles, fp32
-    return 4 * (bn * bd + 3 * bd * bk + 3 * bn * bk + 2 * bn * bk)
+def table_key(op: str, n: int, d: int, k: int) -> Tuple[str, int, int, int]:
+    """The BLOCK_TABLE key for a problem shape: family + pow2-bucketed
+    dims.  The PUBLIC way to build keys for update/save_block_table —
+    persisted tables stay consistent with choose_blocks lookups even if
+    the bucketing scheme changes."""
+    return (_family(op), _bucket(n), _bucket(d), _bucket(k))
+
+
+def block_candidates(n: int, d: int, k: int, *,
+                     op: str = "cws") -> Tuple[Tuple[int, int, int], ...]:
+    """The measured-autotune sweep grid for one problem shape: every pow2
+    (b1, b2, bd) combination at or below the problem dims whose working
+    set fits the VMEM budget, with b1/b2 at or above the fp32 native tile
+    (8, 128) when the problem allows.  Shared by tools/autotune_blocks.py
+    so the harness and the heuristic agree on the legal space."""
+    fam = _family(op)
+    b1s = [b for b in (8, 16, 32, 64, 128, 256) if b <= max(n, 8)]
+    b2s = [b for b in (128, 256, 512) if b <= max(k, 128)]
+    bds = [b for b in (128, 256, 512, 1024, 2048, 4096) if b <= max(d, 128)]
+    out = []
+    for b1 in b1s:
+        for b2 in b2s:
+            for bd in bds:
+                if _VMEM_MODELS[fam](b1, b2, bd) <= _VMEM_BUDGET:
+                    out.append((b1, b2, bd))
+    return tuple(out)
 
 
 def choose_blocks(n: int, d: int, k: int, *,
                   op: str = "cws") -> Tuple[int, int, int]:
-    """(bn, bk, bd) for a kernel family at problem size (n, D, k).
+    """(b1, b2, bd) for a kernel family at problem size (n, D, k) —
+    (bn, bk, bd) for the cws families, (bm, bn, bd) for min_sum.
 
     Consults the autotune table first (family + pow2-bucketed key), then
     a VMEM heuristic: start from the VPU-friendly (128, 128, 4096)
-    ceiling, clamp to the problem, and shrink bd -> bn -> bk until the
-    working set fits the budget.  The VMEM model is the CWS kernel's (the larger of
-    the two families), so it is conservative for the gram kernels.  Never
-    returns a block below the fp32 (8, 128) native tile unless the
-    problem itself is smaller.
+    ceiling, clamp to the problem, and shrink bd -> b1 -> b2 until the
+    family's working-set model fits the budget.  Never returns a block
+    below the fp32 (8, 128) native tile unless the problem itself is
+    smaller.
     """
-    key = (op, _bucket(n), _bucket(d), _bucket(k))
+    fam = _family(op)
+    key = table_key(op, n, d, k)
     if key in BLOCK_TABLE:
-        bn, bk, bd = BLOCK_TABLE[key]
-        return min(bn, n), min(bk, k), min(bd, d)
-    bn = _pow2_at_most(n, 1, 128)
-    bk = _pow2_at_most(k, 1, 128)
+        b1, b2, bd = BLOCK_TABLE[key]
+        return min(b1, n), min(b2, k), min(bd, d)
+    model = _VMEM_MODELS[fam]
+    b1 = _pow2_at_most(n, 1, 128)
+    b2 = _pow2_at_most(k, 1, 128)
     # bd ceiling of 4096 lets the parameter fetch amortize on huge-D data
     # (the paper's 65536-dim word vectors); the budget loops below bring
-    # it back down when the (bn, bk) tile leaves too little VMEM.
+    # it back down when the (b1, b2) tile leaves too little VMEM.
     bd = _pow2_at_most(d, 1, 4096)
-    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bd > 128:
+    while model(b1, b2, bd) > _VMEM_BUDGET and bd > 128:
         bd //= 2
-    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bn > 8:
-        bn //= 2
-    while _vmem_bytes(bn, bk, bd) > _VMEM_BUDGET and bk > 8:
-        bk //= 2
-    return bn, bk, bd
+    while model(b1, b2, bd) > _VMEM_BUDGET and b1 > 8:
+        b1 //= 2
+    while model(b1, b2, bd) > _VMEM_BUDGET and b2 > 8:
+        b2 //= 2
+    return b1, b2, bd

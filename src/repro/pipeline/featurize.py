@@ -34,8 +34,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cws import CWSParams, make_cws_params, cws_hash_reference
+from repro.core.cws import (CWSParams, make_cws_params, cws_hash_reference,
+                            cws_hash_regen)
 from repro.core.hashing import encode, feature_indices, hashed_dim
+from repro.core.regen import key_words
 from repro.kernels import ops, registry
 
 Array = jax.Array
@@ -62,22 +64,45 @@ class FeatureSpec:
 
 
 class FeaturePipeline:
-    """CWS featurization bound to one (params, spec) pair.
+    """CWS featurization bound to one (params, spec) pair — or, in
+    PARAM-FREE mode, to one (PRNG key, spec) pair.
 
     ``impl`` pins a registry implementation name (``pallas``,
     ``pallas-interpret``, ``reference``); None dispatches by backend
     capability.  ``blocks`` pins (bn, bk, bd); None consults the autotune
     table/heuristic per launch shape.
+
+    Param-free mode (``create_regen``) stores only two uint32 key words
+    instead of the 3·D·k fp32 parameter matrices: every launch regenerates
+    its parameter tiles in-kernel from the counter spec (DESIGN.md §7), so
+    parameter HBM traffic is zero and a fresh-parameter Monte-Carlo rep
+    (fig45/fig6 style) is just ``pipe.with_key(new_key)`` — no
+    materialization, no new device buffers.
     """
 
-    def __init__(self, params: CWSParams, spec: FeatureSpec, *,
+    def __init__(self, params: Optional[CWSParams], spec: FeatureSpec, *,
                  impl: Optional[str] = None,
                  blocks: Optional[Tuple[int, int, int]] = None,
-                 row_chunk: int = 8192):
-        if spec.num_hashes > params.num_hashes:
-            raise ValueError(
-                f"spec asks for {spec.num_hashes} hashes but params carry "
-                f"only {params.num_hashes}")
+                 row_chunk: int = 8192,
+                 regen_key: Optional[Array] = None,
+                 dim: Optional[int] = None):
+        if params is None:
+            if regen_key is None or dim is None:
+                raise ValueError(
+                    "param-free mode needs regen_key and dim "
+                    "(use FeaturePipeline.create_regen)")
+            k0, k1 = key_words(regen_key)
+            self._key_words = jnp.stack([k0, k1])
+            self.dim = dim
+        elif regen_key is not None:
+            raise ValueError("pass either params or regen_key, not both")
+        else:
+            if spec.num_hashes > params.num_hashes:
+                raise ValueError(
+                    f"spec asks for {spec.num_hashes} hashes but params "
+                    f"carry only {params.num_hashes}")
+            self._key_words = None
+            self.dim = params.dim
         self.params = params
         self.spec = spec
         self.impl = impl
@@ -90,6 +115,26 @@ class FeaturePipeline:
                **kw) -> "FeaturePipeline":
         return cls(make_cws_params(key, dim, spec.num_hashes), spec, **kw)
 
+    @classmethod
+    def create_regen(cls, key: Array, dim: int, spec: FeatureSpec,
+                     **kw) -> "FeaturePipeline":
+        """Param-free pipeline: stores only ``key`` (two uint32 words)."""
+        return cls(None, spec, regen_key=key, dim=dim, **kw)
+
+    def with_key(self, key: Array) -> "FeaturePipeline":
+        """A fresh-parameter replica of a param-free pipeline (Monte-Carlo
+        reps draw a new key instead of new parameter matrices)."""
+        if not self.param_free:
+            raise ValueError("with_key is for param-free pipelines; "
+                             "stored-param pipelines rebuild via create()")
+        return FeaturePipeline(None, self.spec, impl=self.impl,
+                               blocks=self.blocks, row_chunk=self.row_chunk,
+                               regen_key=key, dim=self.dim)
+
+    @property
+    def param_free(self) -> bool:
+        return self.params is None
+
     @property
     def num_features(self) -> int:
         return self.spec.num_features
@@ -98,11 +143,20 @@ class FeaturePipeline:
 
     def _launch(self, x: Array) -> Array:
         bn, bk, bd = self.blocks or (None, None, None)
+        if self.param_free:
+            return ops.cws_encode_rng(
+                x, self._key_words, self.spec.num_hashes, b_i=self.spec.b_i,
+                b_t=self.spec.b_t, bn=bn, bk=bk, bd=bd,
+                impl=self._resolved_impl())
         return ops.cws_encode(
-            x, self._sliced_params(), b_i=self.spec.b_i, b_t=self.spec.b_t,
+            x, self._state(), b_i=self.spec.b_i, b_t=self.spec.b_t,
             bn=bn, bk=bk, bd=bd, impl=self._resolved_impl())
 
-    def _sliced_params(self) -> CWSParams:
+    def _state(self):
+        """The replicated launch state: the (sliced) CWSParams matrices,
+        or just the two uint32 key words in param-free mode."""
+        if self.param_free:
+            return self._key_words
         if self.spec.num_hashes == self.params.num_hashes:
             return self.params
         return self.params.slice_hashes(0, self.spec.num_hashes)
@@ -133,7 +187,10 @@ class FeaturePipeline:
         impl = self.impl
         if impl is None and not registry.on_tpu():
             impl = "reference"
-        return ops.cws_hash(x, self._sliced_params(), bn=bn, bk=bk, bd=bd,
+        if self.param_free:
+            return ops.cws_hash_rng(x, self._key_words, self.spec.num_hashes,
+                                    bn=bn, bk=bk, bd=bd, impl=impl)
+        return ops.cws_hash(x, self._state(), bn=bn, bk=bk, bd=bd,
                             impl=impl)
 
     def features_from_hashes(self, i_star: Array, t_star: Array) -> Array:
@@ -150,8 +207,13 @@ class FeaturePipeline:
         return encode(i_star, t_star, b_i=self.spec.b_i, b_t=self.spec.b_t)
 
     def staged_reference(self, x: Array) -> Array:
-        """The unchunked staged oracle — tests compare ``features`` to this."""
-        i_star, t_star = cws_hash_reference(x, self._sliced_params())
+        """The unchunked staged oracle — tests compare ``features`` to this.
+        In param-free mode the oracle is the counter-spec regen path."""
+        if self.param_free:
+            i_star, t_star = cws_hash_regen(x, self._key_words,
+                                            self.spec.num_hashes)
+        else:
+            i_star, t_star = cws_hash_reference(x, self._state())
         return self.features_from_hashes(i_star, t_star)
 
     def _require_bucketed(self, method: str) -> None:
@@ -176,27 +238,35 @@ class FeaturePipeline:
         if self._donating_chunk_fn is None:
             donate = (0,) if registry.on_tpu() else ()
             self._donating_chunk_fn = jax.jit(
-                lambda xc, params: self._launch_with(xc, params),
+                lambda xc, state: self._launch_with(xc, state),
                 donate_argnums=donate)
         return self._donating_chunk_fn
 
-    def _launch_with(self, x: Array, params: CWSParams) -> Array:
+    def _launch_with(self, x: Array, state) -> Array:
+        """One kernel launch on explicit state (CWSParams or key words)."""
+        fam = "cws_rng" if self.param_free else "cws"
         bn, bk, bd = self.blocks or registry.choose_blocks(
-            x.shape[0], x.shape[1], self.spec.num_hashes)
+            x.shape[0], x.shape[1], self.spec.num_hashes, op=fam)
+        if self.param_free:
+            fn = registry.resolve("cws_encode_rng",
+                                  self._resolved_impl()).fn
+            return fn(x, state, self.spec.num_hashes, b_i=self.spec.b_i,
+                      b_t=self.spec.b_t, bn=bn, bk=bk, bd=bd)
         fn = registry.resolve("cws_encode", self._resolved_impl()).fn
-        return fn(x, params, b_i=self.spec.b_i, b_t=self.spec.b_t,
+        return fn(x, state, b_i=self.spec.b_i, b_t=self.spec.b_t,
                   bn=bn, bk=bk, bd=bd)
 
     def _resolved_impl(self) -> str:
-        return self.impl or registry.auto_impl("cws_encode")
+        op = "cws_encode_rng" if self.param_free else "cws_encode"
+        return self.impl or registry.auto_impl(op)
 
     def _features_streamed(self, x: Array, launch=None) -> Array:
         """Chunked launches keep peak memory at O(row_chunk * max(D, k))
         on every path — ``launch`` overrides the per-chunk callable (the
         sharded case); default is the donating jitted chunk fn."""
         n = x.shape[0]
-        params = self._sliced_params()
-        fn = launch or (lambda c: self._chunk_fn()(c, params))
+        state = self._state()
+        fn = launch or (lambda c: self._chunk_fn()(c, state))
         outs = []
         for lo in range(0, n, self.row_chunk):
             chunk = jax.lax.slice_in_dim(x, lo, min(lo + self.row_chunk, n),
@@ -212,12 +282,14 @@ class FeaturePipeline:
         n = x.shape[0]
         pad = (-n) % ndev
         xp = jnp.pad(x, ((0, pad), (0, 0)))   # all-zero pad rows -> bucket 0
-        params = self._sliced_params()
+        state = self._state()
+        # rows split over `data`; hash state (params or key) replicated
+        state_spec = P(None) if self.param_free else P(None, None)
         f = shard_map(
             lambda xs, ps: self._launch_with(xs, ps),
             mesh=mesh,
-            in_specs=(P("data", None), P(None, None)),
+            in_specs=(P("data", None), state_spec),
             out_specs=P("data", None),
             check_rep=False,
         )
-        return f(xp, params)[:n]
+        return f(xp, state)[:n]

@@ -174,7 +174,7 @@ class TestRegistry:
                           (8192, 65536, 1024), (100000, 4096, 2048)]:
             bn, bk, bd = registry.choose_blocks(n, d, k)
             assert 1 <= bn <= n and 1 <= bk <= k and 1 <= bd <= d
-            assert registry._vmem_bytes(bn, bk, bd) <= 16 * 2 ** 20
+            assert registry.vmem_bytes(bn, bk, bd, op="cws") <= 16 * 2 ** 20
 
     def test_table_override_is_per_op(self):
         shape = (2 ** 14, 2 ** 14, 2 ** 14)
