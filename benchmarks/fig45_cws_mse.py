@@ -15,9 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from repro.core import (cws_hash, make_cws_params, minmax_pair, encode,
-                        collision_estimate, full_collision_estimate)
+from repro.core import (minmax_pair, encode, collision_estimate,
+                        full_collision_estimate)
 from repro.data.synthetic import word_pair
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 KS = (1, 4, 16, 64, 256, 1024)
 
@@ -48,12 +49,17 @@ def run(fast: bool = False, pairs=("HONG-KONG", "CREDIT-CARD",
         pair_reps = max(200, min(reps, int(reps * 1000 / max(len(u), 1))))
         t0 = time.perf_counter()
 
-        # one big batch of reps*kmax independent hashes
+        # one big batch of reps*kmax independent hashes through the
+        # PARAM-FREE pipeline: each Monte-Carlo rep is `.with_key(key)` —
+        # parameters are regenerated from the counter spec per launch, so
+        # no rep ever materializes its 3 x D x kmax matrices
+        pipe = FeaturePipeline.create_regen(
+            jax.random.PRNGKey(0), x.shape[1],
+            FeatureSpec(num_hashes=kmax, b_i=1))
+
         @jax.jit
         def hashes(key):
-            params = make_cws_params(key, x.shape[1], kmax)
-            i_s, t_s = cws_hash(x, params, row_block=2, hash_block=256)
-            return i_s, t_s
+            return pipe.with_key(key).hashes(x)
 
         keys = jax.random.split(jax.random.PRNGKey(0), pair_reps)
         i_all, t_all = jax.lax.map(hashes, keys)   # (reps, 2, kmax)

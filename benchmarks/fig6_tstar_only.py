@@ -10,9 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, save_json
-from repro.core import cws_hash, make_cws_params, minmax_pair
+from repro.core import minmax_pair
 from repro.core.hashing import encode_tstar_only
 from repro.data.synthetic import word_pair
+from repro.pipeline import FeaturePipeline, FeatureSpec
 
 
 def run(fast: bool = False, pair: str = "CREDIT-CARD", reps: int = 500,
@@ -23,10 +24,14 @@ def run(fast: bool = False, pair: str = "CREDIT-CARD", reps: int = 500,
     x = jnp.stack([jnp.asarray(u), jnp.asarray(v)])
     k_true = float(minmax_pair(x[0], x[1]))
 
+    # param-free pipeline: each Monte-Carlo rep is `.with_key` (counter
+    # regeneration), never a stored 3 x D x k parameter draw
+    pipe = FeaturePipeline.create_regen(jax.random.PRNGKey(1), x.shape[1],
+                                        FeatureSpec(num_hashes=k, b_i=1))
+
     @jax.jit
     def hashes(key):
-        params = make_cws_params(key, x.shape[1], k)
-        return cws_hash(x, params, row_block=2, hash_block=256)
+        return pipe.with_key(key).hashes(x)
 
     t0 = time.perf_counter()
     keys = jax.random.split(jax.random.PRNGKey(1), reps)

@@ -3,9 +3,14 @@
 Fig 7: accuracy vs k (32..1024) and b_i (1/2/4/8): approaches the exact
 min-max kernel machine from below; linear-kernel accuracy is the floor.
 Fig 8: b_t = 2 vs b_t = 0 — with b_i >= 4 they coincide (t* adds nothing).
+
+Plus the paper's actual training regime: the streamed minibatch path
+(featurization fused into the SGD loop, (n, k) never materialized) must
+match full-batch accuracy — emitted to BENCH_linear_stream.json.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -18,6 +23,7 @@ from repro.core.linear_model import (TrainCfg, fit_linear, init_bag,
                                      linear_accuracy)
 from repro.data.synthetic import make_template_classification
 from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.training import fit_linear_streamed, streamed_accuracy
 
 KS = (32, 128, 512, 1024)
 BIS = (1, 2, 4, 8)
@@ -93,6 +99,50 @@ def run(fast: bool = False):
 
     save_json("fig78_linear_svm", {"fig7": fig7, "fig8": fig8})
 
+    # streamed minibatch training (the paper's large-scale regime):
+    # features launch per batch INSIDE the SGD loop via the fused
+    # pipeline, so the (n, k) index matrix never exists — accuracy must
+    # match the full-batch learner on the same spec.
+    # fixed (k, b_i) in BOTH modes: the comparison tracks the TRAINER's
+    # streamed-vs-fullbatch gap, not the k-sweep (the grid above owns
+    # that); k = 128 keeps the converged-budget fits ~2 min so CI runs
+    # the real thing (at k = 1024 the same convergence budget is ~20 min
+    # of pure optimizer time for an identical conclusion)
+    k_s, b_s = min(128, max(ks)), max(bis)
+    spec_s = FeatureSpec(num_hashes=k_s, b_i=b_s)
+    pipe_s = FeaturePipeline(params, spec_s)   # k_s-prefix of the hash set
+    # both learners trained to CONVERGENCE (the sweep above uses a short
+    # 250-step budget per cell; comparing half-trained runs would measure
+    # optimization noise, not the streaming path): full batch needs the
+    # longer schedule, the half-data minibatch path sees 2 updates/epoch
+    cfg_fb = TrainCfg(n_classes=n_classes, steps=1000, lr=0.05, l2=1e-5)
+    cfg_st = TrainCfg(n_classes=n_classes, steps=500, lr=0.05, l2=1e-5,
+                      batch_size=min(600, int(xtr.shape[0])))
+    p0 = init_bag(jax.random.PRNGKey(0), pipe_s.num_features, n_classes)
+    t0 = time.perf_counter()
+    f_tr, f_te = pipe_s.features(xtr), pipe_s.features(xte)
+    p_fb = fit_linear(p0, f_tr, ytr, cfg=cfg_fb, kind="bag")
+    acc_fb = linear_accuracy(p_fb, f_te, yte, kind="bag")
+    us_fb = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    p_st = fit_linear_streamed(p0, pipe_s, xtr, ytr, cfg=cfg_st)
+    acc_st = streamed_accuracy(p_st, pipe_s, xte, yte)
+    us_st = (time.perf_counter() - t0) * 1e6
+    gap_pp = abs(acc_st - acc_fb) * 100
+    emit(f"fig78/streamed/k={k_s}/b_i={b_s}", us_st,
+         f"acc_streamed={acc_st*100:.1f} acc_fullbatch={acc_fb*100:.1f} "
+         f"gap_pp={gap_pp:.2f}")
+    save_json("BENCH_linear_stream", {
+        "k": k_s, "b_i": b_s, "batch_size": cfg_st.batch_size,
+        "steps": cfg_st.steps, "n_train": int(xtr.shape[0]),
+        "acc_fullbatch": round(acc_fb * 100, 2),
+        "acc_streamed": round(acc_st * 100, 2),
+        "gap_pp": round(gap_pp, 3),
+        "us_fullbatch": round(us_fb), "us_streamed": round(us_st),
+    })
+    assert gap_pp <= 0.5, \
+        f"streamed training drifted from full batch by {gap_pp:.2f} pp"
+
     # paper claims:
     best_hashed = max(fig7["grid"].values())
     assert best_hashed >= acc_lin * 100, "hashed must beat raw linear"
@@ -113,4 +163,6 @@ def run(fast: bool = False):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    run(fast=ap.parse_args().fast)

@@ -22,6 +22,7 @@ from repro.core.linear_model import (TrainCfg, fit_linear, init_bag,
                                      linear_accuracy)
 from repro.data.synthetic import make_template_classification
 from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.training import fit_linear_streamed, streamed_accuracy
 
 
 def main():
@@ -45,25 +46,38 @@ def main():
             n_classes=ds.n_classes, sweeps=20)
         print(f"exact {kern:8s} kernel SVM: {acc * 100:.1f}%")
 
-    # 0-bit CWS -> linear classifier (the paper's proposal), through the
-    # fused featurization pipeline: one kernel pass emits the final
-    # embedding-bag indices (a k-prefix slice reuses the same pass) -----
+    # 0-bit CWS -> linear classifier (the paper's proposal), trained the
+    # paper's way: STREAMED minibatch SGD with featurization fused into
+    # the loop — each batch is hashed by one fused-pipeline kernel launch
+    # and the full (n, k) index matrix never exists, so this loop runs
+    # unchanged on data that never fits in memory ------------------------
     kmax = max(ks)
-    spec = FeatureSpec(num_hashes=kmax, b_i=args.b_i)
-    pipe = FeaturePipeline.create(jax.random.PRNGKey(0), xtr.shape[1], spec)
-    t0 = time.perf_counter()
-    feat_tr = pipe.features(xtr)
-    feat_te = pipe.features(xte)
-    print(f"featurized {xtr.shape[0] + xte.shape[0]} examples with k={kmax} "
-          f"in {time.perf_counter() - t0:.1f}s")
-
+    params = FeaturePipeline.create(jax.random.PRNGKey(0), xtr.shape[1],
+                                    FeatureSpec(kmax, b_i=args.b_i)).params
     for k in ks:
-        cfg = TrainCfg(n_classes=ds.n_classes, steps=250, lr=0.05, l2=1e-5)
-        p0 = init_bag(jax.random.PRNGKey(0), k * spec.width, ds.n_classes)
-        p = fit_linear(p0, feat_tr[:, :k], ytr, cfg=cfg, kind="bag")
-        acc = linear_accuracy(p, feat_te[:, :k], yte, kind="bag")
-        print(f"0-bit CWS + linear (k={k:5d}, b_i={args.b_i}): "
-              f"{acc * 100:.1f}%")
+        spec = FeatureSpec(num_hashes=k, b_i=args.b_i)
+        pipe = FeaturePipeline(params, spec)   # k-prefix of one hash set
+        cfg = TrainCfg(n_classes=ds.n_classes, steps=400, lr=0.05, l2=1e-5,
+                       batch_size=min(256, xtr.shape[0]))
+        p0 = init_bag(jax.random.PRNGKey(0), pipe.num_features,
+                      ds.n_classes)
+        t0 = time.perf_counter()
+        p = fit_linear_streamed(p0, pipe, xtr, ytr, cfg=cfg)
+        acc = streamed_accuracy(p, pipe, xte, yte)
+        print(f"0-bit CWS + streamed linear (k={k:5d}, b_i={args.b_i}): "
+              f"{acc * 100:.1f}%  [{time.perf_counter() - t0:.1f}s]")
+
+    # full-batch reference at the largest k: the streamed learner must
+    # land on the same accuracy (BENCH_linear_stream.json tracks this
+    # gap across PRs via benchmarks/fig78_linear_svm.py)
+    pipe = FeaturePipeline(params, FeatureSpec(kmax, b_i=args.b_i))
+    feat_tr, feat_te = pipe.features(xtr), pipe.features(xte)
+    cfg = TrainCfg(n_classes=ds.n_classes, steps=1000, lr=0.05, l2=1e-5)
+    p0 = init_bag(jax.random.PRNGKey(0), pipe.num_features, ds.n_classes)
+    p = fit_linear(p0, feat_tr, ytr, cfg=cfg, kind="bag")
+    acc = linear_accuracy(p, feat_te, yte, kind="bag")
+    print(f"full-batch reference      (k={kmax:5d}, b_i={args.b_i}): "
+          f"{acc * 100:.1f}%")
 
 
 if __name__ == "__main__":

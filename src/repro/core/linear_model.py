@@ -52,11 +52,21 @@ def dense_logits(params: LinearParams, x: Array) -> Array:
 
 
 def hashed_logits(params: LinearParams, codes: Array) -> Array:
-    """codes: (n, k) int32 bucket ids in [0, width). Embedding-bag gather."""
+    """codes: (n, k) int32 bucket ids in [0, width). Embedding-bag gather.
+
+    Index policy (deliberate, tested in test_linear_stream.py): sentinel
+    codes (-1, emitted by ``encode`` for all-zero rows) clamp to bucket 0
+    — the SAME convention the fused pipeline bakes into its indices, so
+    an all-zero row is featurized identically on both surfaces (it
+    aliases a real bucket-0 hit; the paper's scheme has no reserved
+    empty bucket).  Codes >= width (a spec/params mismatch) clamp to
+    width-1 instead of hitting XLA's implementation-defined OOB gather
+    behavior; catch mismatches loudly with validate_bag_features."""
+    width = params.w.shape[1]
     # (n, k, C) <- W[j, codes[:, j], :]
     gathered = jnp.take_along_axis(
         params.w[None],                      # (1, k, width, C)
-        codes[:, :, None, None].astype(jnp.int32).clip(0),  # (n, k, 1, 1)
+        codes[:, :, None, None].astype(jnp.int32).clip(0, width - 1),
         axis=2,
     )[:, :, 0, :]
     return gathered.sum(axis=1) + params.b
@@ -65,9 +75,37 @@ def hashed_logits(params: LinearParams, codes: Array) -> Array:
 def bag_logits(params: LinearParams, idx: Array) -> Array:
     """idx: (n, k) int32 GLOBAL feature indices in [0, F) — exactly what
     repro.pipeline.FeaturePipeline.features emits.  Embedding-bag gather
-    over the flat (F, C) table."""
-    return jnp.take(params.w, idx.astype(jnp.int32).clip(0),
+    over the flat (F, C) table.
+
+    Pipeline indices are in-range by construction (sentinels already map
+    to bucket 0 of their hash upstream), so the [0, F-1] clamp only
+    guards a features/table mismatch that XLA gather semantics would
+    otherwise corrupt silently; validate_bag_features turns the same
+    mismatch into a loud build-time error."""
+    if idx.ndim != 2:
+        raise ValueError(f"bag indices must be (n, k); got {idx.shape}")
+    if params.w.ndim != 2:
+        raise ValueError("bag params must be a flat (F, C) table "
+                         f"(init_bag); got w {params.w.shape}")
+    num_features = params.w.shape[0]
+    return jnp.take(params.w,
+                    idx.astype(jnp.int32).clip(0, num_features - 1),
                     axis=0).sum(axis=1) + params.b
+
+
+def validate_bag_features(params: LinearParams, num_features: int) -> None:
+    """Trace-time guard wiring a (F, C) table to a feature space: a table
+    whose row count differs from the pipeline's ``num_features`` makes
+    every bag_logits gather clamp (logits silently corrupted), so fail
+    where the sizes are both known instead."""
+    if params.w.ndim != 2:
+        raise ValueError("bag params must be a flat (F, C) table "
+                         f"(init_bag); got w {params.w.shape}")
+    if params.w.shape[0] != num_features:
+        raise ValueError(
+            f"feature-table mismatch: table has {params.w.shape[0]} rows "
+            f"but the pipeline emits indices into {num_features} features; "
+            f"build with init_bag(key, pipe.num_features, n_classes)")
 
 
 _LOGITS_FNS = {"dense": dense_logits, "hashed": hashed_logits,
@@ -89,10 +127,10 @@ def softmax_xent_loss(logits: Array, labels: Array, n_classes: int) -> Array:
 @dataclasses.dataclass(frozen=True)
 class TrainCfg:
     n_classes: int
-    steps: int = 400
+    steps: int = 400          # UPDATE steps (not epochs), any batch_size
     lr: float = 0.05
     l2: float = 1e-4          # = 1/(2C) scaled by n
-    batch_size: int = 0       # 0 => full batch
+    batch_size: int = 0       # 0 => explicit full batch; > 0 => minibatch
     loss: str = "squared_hinge"
 
 
@@ -106,22 +144,77 @@ def _loss_fn(params, xb, yb, cfg: TrainCfg, logits_fn):
     return data + reg
 
 
+def make_linear_tx(cfg: TrainCfg):
+    """The one optimizer recipe for the linear tier — shared by the
+    full-batch/minibatch paths here and the streaming trainer
+    (repro.training.linear_trainer), so their updates are bit-comparable."""
+    return optim.chain(optim.clip_by_global_norm(10.0),
+                       optim.adamw(optim.cosine_schedule(cfg.lr, cfg.steps)))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "kind"))
 def fit_linear(params: LinearParams, x: Array, labels: Array, *,
-               cfg: TrainCfg, kind: str = "dense") -> LinearParams:
-    """Full-batch Adam (deterministic, good up to ~100k examples on CPU)."""
+               cfg: TrainCfg, kind: str = "dense",
+               shuffle_key: Array | None = None) -> LinearParams:
+    """Adam on materialized features: full batch (``cfg.batch_size == 0``
+    — deterministic, bit-stable, good up to ~100k examples on CPU) or
+    permutation-shuffled minibatches (``cfg.batch_size > 0``; a fresh
+    epoch permutation is derived per epoch from ``shuffle_key``, and the
+    ragged remainder of each permutation is dropped — different rows
+    each epoch).  ``cfg.steps`` counts updates on both paths.
+
+    ``batch_size == n`` takes the full-batch gradient without a gather:
+    a full-batch gradient is permutation-invariant, so shuffling only
+    costs float reassociation — skipping it keeps the path bit-identical
+    to ``batch_size == 0``.  For n too large to materialize the (n, k)
+    feature matrix at all, use repro.training.linear_trainer, which
+    streams featurization inside the loop."""
     logits_fn = _LOGITS_FNS[kind]
-    tx = optim.chain(optim.clip_by_global_norm(10.0),
-                     optim.adamw(optim.cosine_schedule(cfg.lr, cfg.steps)))
+    n = x.shape[0]
+    bs = cfg.batch_size
+    if bs < 0:
+        raise ValueError(f"batch_size must be >= 0; got {bs}")
+    if bs > n:
+        raise ValueError(
+            f"batch_size {bs} exceeds the {n} available rows; pass "
+            f"batch_size=0 for the explicit full-batch path")
+    tx = make_linear_tx(cfg)
     state = tx.init(params)
 
-    def step(i, carry):
-        params, state = carry
-        grads = jax.grad(_loss_fn)(params, x, labels, cfg, logits_fn)
-        updates, state = tx.update(grads, state, params, i)
-        return optim.apply_updates(params, updates), state
+    if bs in (0, n):
+        def step(i, carry):
+            params, state = carry
+            grads = jax.grad(_loss_fn)(params, x, labels, cfg, logits_fn)
+            updates, state = tx.update(grads, state, params, i)
+            return optim.apply_updates(params, updates), state
 
-    params, _ = jax.lax.fori_loop(0, cfg.steps, step, (params, state))
+        params, _ = jax.lax.fori_loop(0, cfg.steps, step, (params, state))
+        return params
+
+    steps_per_epoch = n // bs
+    key = shuffle_key if shuffle_key is not None else jax.random.PRNGKey(0)
+
+    def step(i, carry):
+        params, state, perm = carry
+        epoch = i // steps_per_epoch
+        pos = i % steps_per_epoch
+        # the O(n log n) shuffle runs only on epoch boundaries; the
+        # permutation is carried through the loop in between
+        perm = jax.lax.cond(
+            pos == 0,
+            lambda: jax.random.permutation(jax.random.fold_in(key, epoch),
+                                           n),
+            lambda: perm)
+        idx = jax.lax.dynamic_slice_in_dim(perm, pos * bs, bs)
+        xb = jnp.take(x, idx, axis=0)
+        yb = jnp.take(labels, idx, axis=0)
+        grads = jax.grad(_loss_fn)(params, xb, yb, cfg, logits_fn)
+        updates, state = tx.update(grads, state, params, i)
+        return optim.apply_updates(params, updates), state, perm
+
+    perm0 = jnp.arange(n, dtype=jnp.int32)   # replaced at i = 0 (pos == 0)
+    params, _, _ = jax.lax.fori_loop(0, cfg.steps, step,
+                                     (params, state, perm0))
     return params
 
 

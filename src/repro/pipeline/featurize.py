@@ -109,6 +109,8 @@ class FeaturePipeline:
         self.blocks = blocks
         self.row_chunk = row_chunk
         self._donating_chunk_fn = None
+        self._sliced_state = None      # cache: k-prefix slice of params
+        self._sliced_from = None
 
     @classmethod
     def create(cls, key: Array, dim: int, spec: FeatureSpec,
@@ -154,14 +156,64 @@ class FeaturePipeline:
 
     def _state(self):
         """The replicated launch state: the (sliced) CWSParams matrices,
-        or just the two uint32 key words in param-free mode."""
+        or just the two uint32 key words in param-free mode.  The
+        k-prefix slice is cached (keyed on params identity) so per-batch
+        launch_chunk calls don't re-slice three (D, k) matrices every
+        training step."""
         if self.param_free:
             return self._key_words
         if self.spec.num_hashes == self.params.num_hashes:
             return self.params
-        return self.params.slice_hashes(0, self.spec.num_hashes)
+        if self._sliced_from is not self.params:
+            self._sliced_from = self.params
+            self._sliced_state = self.params.slice_hashes(
+                0, self.spec.num_hashes)
+        return self._sliced_state
 
     # -- public API ----------------------------------------------------
+
+    def launch_chunk(self, xc: Array) -> Array:
+        """ONE donated kernel launch: xc (m, D) nonneg -> (m, k) int32
+        embedding-bag indices.
+
+        The building block behind ``features`` streaming and the streamed
+        minibatch trainer (repro.training.linear_trainer): the caller owns
+        the batching.  Each distinct m compiles once, so keep m fixed
+        across calls (pad ragged tails — all-zero pad rows land in bucket
+        0 and slice off cleanly).  On TPU the chunk buffer is donated to
+        the launch: hand over a buffer you are done with (a fresh batch
+        gather, a slice), never a live input array."""
+        self._require_bucketed("launch_chunk")
+        return self._chunk_fn()(xc, self._state())
+
+    def feature_chunks(self, x: Array, *, launch=None):
+        """Iterator form of ``features``: yields ``(lo, hi, idx[lo:hi])``
+        per ``row_chunk`` rows, so a consumer (the streaming trainer, a
+        chunked evaluator) can walk n >> row_chunk rows without ever
+        holding the full (n, k) index matrix.
+
+        A ragged final chunk is padded up to ``row_chunk`` and the pad
+        rows sliced off (all-zero rows map to sentinel -> bucket 0, then
+        are discarded), so streaming compiles EXACTLY ONE chunk shape —
+        no recompile on the tail.  ``launch`` overrides the per-chunk
+        callable (the sharded path); default is the donating jitted
+        chunk fn."""
+        self._require_bucketed("feature_chunks")
+        n = x.shape[0]
+        fn = launch or self.launch_chunk
+        on_device = isinstance(x, jax.Array)
+        for lo in range(0, n, self.row_chunk):
+            hi = min(lo + self.row_chunk, n)
+            # host-resident rows (numpy/memmap) slice on the host, so only
+            # the chunk ever crosses to the device
+            chunk = (jax.lax.slice_in_dim(x, lo, hi, axis=0) if on_device
+                     else jnp.asarray(x[lo:hi]))
+            if hi - lo < self.row_chunk and n > self.row_chunk:
+                chunk = jnp.pad(chunk,
+                                ((0, self.row_chunk - (hi - lo)), (0, 0)))
+                yield lo, hi, fn(chunk)[:hi - lo]
+            else:
+                yield lo, hi, fn(chunk)
 
     def features(self, x: Array, *, mesh=None) -> Array:
         """x (n, D) nonneg -> embedding-bag indices (n, k) int32 into
@@ -262,17 +314,11 @@ class FeaturePipeline:
 
     def _features_streamed(self, x: Array, launch=None) -> Array:
         """Chunked launches keep peak memory at O(row_chunk * max(D, k))
-        on every path — ``launch`` overrides the per-chunk callable (the
-        sharded case); default is the donating jitted chunk fn."""
-        n = x.shape[0]
-        state = self._state()
-        fn = launch or (lambda c: self._chunk_fn()(c, state))
-        outs = []
-        for lo in range(0, n, self.row_chunk):
-            chunk = jax.lax.slice_in_dim(x, lo, min(lo + self.row_chunk, n),
-                                         axis=0)
-            outs.append(fn(chunk))
-        return jnp.concatenate(outs, axis=0)
+        on every path; the ragged tail is padded inside feature_chunks so
+        only one chunk shape ever compiles."""
+        return jnp.concatenate(
+            [out for _, _, out in self.feature_chunks(x, launch=launch)],
+            axis=0)
 
     def _features_sharded(self, x: Array, mesh) -> Array:
         from jax.experimental.shard_map import shard_map

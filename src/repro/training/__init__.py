@@ -1,10 +1,15 @@
 from repro.training.trainer import (
     TrainState, make_train_step, make_serve_steps, init_train_state,
     param_pspecs, cache_pspecs, input_specs, state_pspecs, TrainHparams,
+    microbatch_grads,
+)
+from repro.training.linear_trainer import (
+    fit_linear_streamed, streamed_accuracy,
 )
 
 __all__ = [
     "TrainState", "make_train_step", "make_serve_steps", "init_train_state",
     "param_pspecs", "cache_pspecs", "input_specs", "state_pspecs",
-    "TrainHparams",
+    "TrainHparams", "microbatch_grads",
+    "fit_linear_streamed", "streamed_accuracy",
 ]

@@ -1,0 +1,170 @@
+"""Streaming minibatch training over the featurization pipeline.
+
+The paper's point is that 0-bit CWS lets a LINEAR learner stand in for
+the exact min-max kernel machine on data far too large for a Gram matrix
+— "b-Bit Minwise Hashing for Large-Scale Linear SVM" is exactly this
+regime.  The full-batch ``fit_linear`` contradicts it: it consumes a
+materialized (n, k) index matrix, so dataset size re-enters the memory
+equation that the embedding-bag layout was designed to keep it out of.
+
+This module is the missing third leg (sample -> encode -> LEARN AT
+SCALE): each minibatch is featurized INSIDE the training loop by one
+donated pipeline kernel launch (``FeaturePipeline.launch_chunk``), so the
+full (n, k) matrix never exists.  Peak working set (DESIGN.md §9):
+
+    O(batch_size * max(D, k))     batch gather + one launch in flight
+  + O(F * C)                      the (num_features, n_classes) table
+                                  + its Adam moments
+
+— independent of n.  The raw (n, D) rows stay wherever the caller keeps
+them (host numpy is fine: the per-batch gather is the only device copy).
+
+Epoch shuffling draws one permutation per epoch from ``shuffle_key``
+(ragged remainder dropped — a fresh permutation drops different rows each
+epoch); ``batch_size == n`` skips the permutation, since a full-batch
+gradient is order-invariant, and is then bit-identical to full-batch
+``fit_linear`` on precomputed features.  The update step shares the
+trainer's microbatch/donation machinery: grads via
+``trainer.microbatch_grads`` and (params, opt state) donated on TPU so
+Adam updates the table in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core.linear_model import (LinearParams, TrainCfg, _loss_fn,
+                                     bag_logits, make_linear_tx,
+                                     validate_bag_features)
+from repro.kernels import registry
+from repro.pipeline import FeaturePipeline
+from repro.training.trainer import microbatch_grads
+
+Array = jax.Array
+
+__all__ = ["fit_linear_streamed", "streamed_accuracy"]
+
+
+def _make_update_step(cfg: TrainCfg, tx, n_micro: int):
+    """One donated jitted update on a featurized minibatch — the bag
+    head riding the trainer's microbatch/donation machinery."""
+    donate = (0, 1) if registry.on_tpu() else ()
+
+    def loss_fn(p, inputs, labels):
+        return _loss_fn(p, inputs, labels, cfg, bag_logits), {}
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def update(params, state, fb, yb, i):
+        loss, _, grads = microbatch_grads(
+            loss_fn, params, {"inputs": fb, "labels": yb}, n_micro=n_micro)
+        updates, state = tx.update(grads, state, params, i)
+        return optim.apply_updates(params, updates), state, loss
+
+    return update
+
+
+def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
+                        x: Array, labels: Array, *, cfg: TrainCfg,
+                        shuffle_key: Optional[Array] = None,
+                        n_microbatches: int = 1) -> LinearParams:
+    """Minibatch SGD with featurization fused into the loop.
+
+    ``x`` (n, D) raw nonneg rows; ``params`` a flat bag table built with
+    ``init_bag(key, pipe.num_features, n_classes)`` (validated here at
+    build time — see validate_bag_features).  ``cfg.steps`` counts
+    updates; ``cfg.batch_size`` must be in [1, n] — batch_size=0 (the
+    explicit full-batch path) belongs to ``fit_linear``, which this
+    function matches bit-for-bit at ``batch_size == n``.
+
+    Every batch launches the SAME (batch_size, D) chunk shape, so the
+    featurization kernel compiles exactly once per fit."""
+    n = x.shape[0]
+    validate_bag_features(params, pipe.num_features)
+    bs = cfg.batch_size
+    if bs <= 0:
+        raise ValueError(
+            "fit_linear_streamed needs batch_size in [1, n]; batch_size=0 "
+            "is the explicit full-batch fit_linear path (which "
+            "materializes the full (n, k) index matrix)")
+    if bs > n:
+        raise ValueError(f"batch_size {bs} exceeds the {n} available rows")
+    if n_microbatches < 1 or bs % n_microbatches:
+        raise ValueError(f"batch_size {bs} must divide into "
+                         f"{n_microbatches} microbatches")
+    if labels.shape[0] != n:
+        raise ValueError(f"labels {labels.shape} do not match x {x.shape}")
+
+    tx = make_linear_tx(cfg)
+    state = tx.init(params)
+    if registry.on_tpu():
+        # the update step donates (params, state); the first call would
+        # otherwise donate — and delete — the CALLER's init table
+        params = jax.tree_util.tree_map(jnp.copy, params)
+    update = _make_update_step(cfg, tx, n_microbatches)
+    steps_per_epoch = max(n // bs, 1)
+    key = shuffle_key if shuffle_key is not None else jax.random.PRNGKey(0)
+    shuffle = bs < n
+
+    # host-resident datasets (numpy/memmap) are gathered on the HOST so
+    # only the (bs, D) batch ever crosses to the device — the raw (n, D)
+    # rows never get a device copy; jax-array datasets gather on device.
+    host_data = not isinstance(x, jax.Array)
+    if host_data:
+        labels_host = np.asarray(labels)
+    else:
+        labels = jnp.asarray(labels)
+
+    if not shuffle:
+        # batch_size == n: the gradient is order-invariant, so skip the
+        # permutation AND the per-step re-featurization — one launch
+        # sweep up front (peak (bs, k) = (n, k) is what bs = n asks for).
+        fb_full = pipe.features(jnp.asarray(x) if host_data else x)
+        yb_full = jnp.asarray(labels)
+    perm = perm_host = None
+    for i in range(cfg.steps):
+        epoch, pos = divmod(i, steps_per_epoch)
+        if shuffle:
+            if pos == 0:
+                perm = jax.random.permutation(
+                    jax.random.fold_in(key, epoch), n)
+                if host_data:
+                    perm_host = np.asarray(perm)
+            if host_data:
+                sel = perm_host[pos * bs:(pos + 1) * bs]
+                xb = jnp.asarray(x[sel])
+                yb = jnp.asarray(labels_host[sel])
+            else:
+                idx = jax.lax.dynamic_slice_in_dim(perm, pos * bs, bs)
+                xb = jnp.take(x, idx, axis=0)
+                yb = jnp.take(labels, idx, axis=0)
+            # the gather buffer is ours alone -> safe to donate to the
+            # featurization launch
+            fb = pipe.launch_chunk(xb)
+        else:
+            fb, yb = fb_full, yb_full
+        params, state, _ = update(params, state, fb, yb, jnp.int32(i))
+    return params
+
+
+def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
+                      x: Array, labels: Array) -> float:
+    """Accuracy over pipeline features without materializing (n, k):
+    walks ``pipe.feature_chunks`` and accumulates correct counts."""
+    validate_bag_features(params, pipe.num_features)
+    n = x.shape[0]
+    if n == 0:
+        return 0.0
+    labels = jnp.asarray(labels)
+    # accumulate on device: a host int() per chunk would serialize each
+    # chunk's compute against the next chunk's dispatch
+    correct = jnp.int32(0)
+    for lo, hi, fb in pipe.feature_chunks(x):
+        pred = jnp.argmax(bag_logits(params, fb), axis=-1)
+        correct = correct + jnp.sum((pred == labels[lo:hi])
+                                    .astype(jnp.int32))
+    return int(correct) / n

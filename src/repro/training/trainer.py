@@ -227,6 +227,50 @@ def input_specs(cfg: ModelConfig, rules: AxisRules, *, shape: str,
 # train step
 # ---------------------------------------------------------------------------
 
+def microbatch_grads(loss_fn: Callable, params: PyTree, batch: dict, *,
+                     n_micro: int = 1,
+                     accum_dtype=jnp.float32,
+                     constrain: Optional[Callable] = None):
+    """THE gradient-accumulation path: value_and_grad over ``n_micro``
+    microbatches via lax.scan, shared by the LM train step below and the
+    streaming bag trainer (repro.training.linear_trainer) so every head
+    rides the same microbatch/donation machinery.
+
+    ``loss_fn(params, inputs, labels) -> (loss, metrics)``; ``batch`` is
+    ``{"inputs", "labels"}`` with leading dim divisible by ``n_micro``.
+    ``constrain`` (optional) pins grad trees to a sharding layout — the
+    FSDP x TP reduce-scatter fix documented in make_train_step.  Returns
+    ``(mean loss, last-microbatch metrics, mean grads)``."""
+    c = constrain or (lambda t: t)
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch["inputs"],
+                                   batch["labels"])
+        return loss, metrics, c(grads)
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+    g0 = c(jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params))
+
+    def accum(carry, mb):
+        g, loss_sum = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb["inputs"], mb["labels"])
+        grads = c(grads)
+        g = c(jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(accum_dtype), g, grads))
+        return (g, loss_sum + loss), metrics
+
+    (grads, loss_sum), metrics = jax.lax.scan(
+        accum, (g0, jnp.float32(0)), micro)
+    metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+    grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+    return loss_sum / n_micro, metrics, grads
+
+
 def make_optimizer(cfg: ModelConfig, hp: TrainHparams):
     sched = optim.linear_warmup_cosine(hp.lr, hp.warmup, hp.total_steps)
     return optim.adamw(sched, b1=hp.b1, b2=hp.b2,
@@ -279,35 +323,9 @@ def make_train_step(cfg: ModelConfig, hp: TrainHparams,
             with use_rules(rules):
                 return train_loss(p, inputs, labels, cfg)
 
-        if n_micro == 1:
-            (loss, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(diff_params, batch["inputs"],
-                                       batch["labels"])
-            grads = constrain_like_params(grads)
-        else:
-            def split(x):
-                return x.reshape((n_micro, x.shape[0] // n_micro)
-                                 + x.shape[1:])
-
-            micro = jax.tree_util.tree_map(split, batch)
-            g0 = constrain_like_params(jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, accum_dtype), params))
-
-            def accum(carry, mb):
-                g, loss_sum = carry
-                (loss, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(diff_params, mb["inputs"],
-                                           mb["labels"])
-                grads = constrain_like_params(grads)
-                g = constrain_like_params(jax.tree_util.tree_map(
-                    lambda a, b: a + b.astype(accum_dtype), g, grads))
-                return (g, loss_sum + loss), metrics
-
-            (grads, loss_sum), metrics = jax.lax.scan(
-                accum, (g0, jnp.float32(0)), micro)
-            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
-            loss = loss_sum / n_micro
-            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        loss, metrics, grads = microbatch_grads(
+            loss_fn, diff_params, batch, n_micro=n_micro,
+            accum_dtype=accum_dtype, constrain=constrain_like_params)
 
         ef = state.ef_residual
         if hp.compress_grads and ef is not None:
