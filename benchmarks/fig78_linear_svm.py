@@ -22,6 +22,7 @@ from repro.core.kernel_svm import best_accuracy_over_C
 from repro.core.linear_model import (TrainCfg, fit_linear, init_bag,
                                      linear_accuracy)
 from repro.data.synthetic import make_template_classification
+from repro.launch.mesh import data_axis_size, make_local_mesh
 from repro.pipeline import FeaturePipeline, FeatureSpec
 from repro.training import fit_linear_streamed, streamed_accuracy
 
@@ -29,7 +30,7 @@ KS = (32, 128, 512, 1024)
 BIS = (1, 2, 4, 8)
 
 
-def run(fast: bool = False):
+def run(fast: bool = False, mesh: bool = False):
     ds = make_template_classification(
         1, n_classes=10, density=0.15, mult_noise=1.2, spike_prob=0.08,
         name="template-hard")
@@ -132,14 +133,52 @@ def run(fast: bool = False):
     emit(f"fig78/streamed/k={k_s}/b_i={b_s}", us_st,
          f"acc_streamed={acc_st*100:.1f} acc_fullbatch={acc_fb*100:.1f} "
          f"gap_pp={gap_pp:.2f}")
-    save_json("BENCH_linear_stream", {
+    bench = {
         "k": k_s, "b_i": b_s, "batch_size": cfg_st.batch_size,
         "steps": cfg_st.steps, "n_train": int(xtr.shape[0]),
         "acc_fullbatch": round(acc_fb * 100, 2),
         "acc_streamed": round(acc_st * 100, 2),
         "gap_pp": round(gap_pp, 3),
         "us_fullbatch": round(us_fb), "us_streamed": round(us_st),
-    })
+    }
+
+    if mesh:
+        # data-parallel streamed training (DESIGN.md §11): the same
+        # batch walk (shared default shuffle key) shard_mapped over the
+        # local mesh's `data` axis — the gap vs the unsharded streamed
+        # run is pure gradient-psum reassociation (exactly 0 at ndev=1,
+        # the forced-8-host-device CI job measures the real thing).
+        m = make_local_mesh()
+        ndev = data_axis_size(m)
+        bs_m = cfg_st.batch_size - (cfg_st.batch_size % ndev)
+        cfg_m = TrainCfg(n_classes=n_classes, steps=cfg_st.steps,
+                         lr=cfg_st.lr, l2=cfg_st.l2, batch_size=bs_m)
+        cfg_u = cfg_m if bs_m != cfg_st.batch_size else cfg_st
+        p_u = (fit_linear_streamed(p0, pipe_s, xtr, ytr, cfg=cfg_u)
+               if cfg_u is not cfg_st else p_st)
+        acc_u = streamed_accuracy(p_u, pipe_s, xte, yte)
+        t0 = time.perf_counter()
+        p_m = fit_linear_streamed(p0, pipe_s, xtr, ytr, cfg=cfg_m, mesh=m)
+        acc_m = streamed_accuracy(p_m, pipe_s, xte, yte, mesh=m)
+        us_m = (time.perf_counter() - t0) * 1e6
+        gap_m = abs(acc_m - acc_u) * 100
+        emit(f"fig78/sharded/ndev={ndev}/k={k_s}/b_i={b_s}", us_m,
+             f"acc_sharded={acc_m*100:.1f} acc_streamed={acc_u*100:.1f} "
+             f"gap_sharded_pp={gap_m:.2f}")
+        bench.update({
+            "ndev": ndev, "batch_size_sharded": bs_m,
+            "acc_sharded": round(acc_m * 100, 2),
+            "gap_sharded_pp": round(gap_m, 3),
+            "us_sharded": round(us_m),
+        })
+
+    # persist the measurements BEFORE the acceptance asserts: a drifting
+    # run must still record the numbers needed to debug it
+    save_json("BENCH_linear_stream", bench)
+    if mesh:
+        assert bench["gap_sharded_pp"] <= 0.5, \
+            f"sharded training drifted from streamed by " \
+            f"{bench['gap_sharded_pp']:.2f} pp"
     assert gap_pp <= 0.5, \
         f"streamed training drifted from full batch by {gap_pp:.2f} pp"
 
@@ -165,4 +204,8 @@ def run(fast: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
-    run(fast=ap.parse_args().fast)
+    ap.add_argument("--mesh", action="store_true",
+                    help="also run the data-parallel streamed path over "
+                         "the local mesh and emit the sharded gap")
+    args = ap.parse_args()
+    run(fast=args.fast, mesh=args.mesh)

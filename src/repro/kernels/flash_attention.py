@@ -30,12 +30,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+def _flash_kernel(q_ref, k_ref, v_ref, qb_ref, o_ref, m_sc, l_sc, acc_sc, *,
                   scale: float, window: int, blk_q: int, blk_k: int,
                   n_kv: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
-    q_off = qi * blk_q
+    # q positions are global: qb (SMEM scalar) is the offset of q row 0
+    # in the full sequence — 0 unsharded, shard_index * shard_len under
+    # the sequence-parallel shard_map wrapper (k/v stay full-length).
+    q_off = qi * blk_q + qb_ref[0]
     k_off = ki * blk_k
 
     @pl.when(ki == 0)
@@ -84,20 +87,31 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
 @functools.partial(jax.jit, static_argnames=("window", "blk_q", "blk_k",
                                              "interpret"))
 def flash_attention_fwd(q, k, v, *, window: int = 0, blk_q: int = 256,
-                        blk_k: int = 256, interpret: bool = False):
-    """q: (B, S, H, D); k/v: (B, S, G, D) with H % G == 0 -> (B, S, H, D)."""
-    b, s, h, d = q.shape
+                        blk_k: int = 256, interpret: bool = False,
+                        q_base=None):
+    """q: (B, Sq, H, D); k/v: (B, Sk, G, D) with H % G == 0 -> (B, Sq, H, D).
+
+    ``q_base`` (traced int32 scalar, default 0) is the GLOBAL position of
+    q row 0: the causal/window mask compares ``q_base + local_row``
+    against the k positions.  The sequence-parallel shard_map wrapper
+    (``sharded_flash_attention``) passes each shard's offset here so
+    every device masks against true sequence coordinates; Sq may then be
+    a shard of the full Sk."""
+    b, sq0, h, d = q.shape
+    sk0 = k.shape[1]
     g = k.shape[2]
     r = h // g
-    blk_q = min(blk_q, s)
-    blk_k = min(blk_k, s)
-    pad_q = (-s) % blk_q
-    pad_k = (-s) % blk_k
+    blk_q = min(blk_q, sq0)
+    blk_k = min(blk_k, sk0)
+    pad_q = (-sq0) % blk_q
+    pad_k = (-sk0) % blk_k
     qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
     kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     sq, sk = qp.shape[1], kp.shape[1]
     n_q, n_kv = sq // blk_q, sk // blk_k
+    qb = jnp.zeros((1,), jnp.int32) if q_base is None else \
+        jnp.asarray(q_base, jnp.int32).reshape((1,))
 
     kernel = functools.partial(
         _flash_kernel, scale=d ** -0.5, window=window,
@@ -111,6 +125,7 @@ def flash_attention_fwd(q, k, v, *, window: int = 0, blk_q: int = 256,
                          lambda bi, hi, qi, ki, r=r: (bi, ki, hi // r, 0)),
             pl.BlockSpec((1, blk_k, 1, d),
                          lambda bi, hi, qi, ki, r=r: (bi, ki, hi // r, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # q_base scalar
         ],
         out_specs=pl.BlockSpec((1, blk_q, 1, d),
                                lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
@@ -121,8 +136,8 @@ def flash_attention_fwd(q, k, v, *, window: int = 0, blk_q: int = 256,
             pltpu.VMEM((blk_q, d), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(qp, kp, vp)
-    return out[:, :s]
+    )(qp, kp, vp, qb)
+    return out[:, :sq0]
 
 
 def _ref_bwd_fn(q, k, v, window, chunk):
@@ -156,3 +171,83 @@ def _fa_bwd(window, block, interpret, res, g_out):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel shard_map wrapper (the production-mesh path)
+# ---------------------------------------------------------------------------
+
+def axes_size(mesh, axes) -> int:
+    """Product of the mesh axis sizes in ``axes`` (() -> 1) — the one
+    spot that turns an axis-name tuple into a shard count (shared with
+    models/attention's routing predicate)."""
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def sharded_flash_attention(q, k, v, window: int, block: int,
+                            interpret: bool, mesh, seq_axes: tuple,
+                            batch_axes: tuple):
+    """Flash attention under tensor/sequence parallelism: pallas_call is
+    not GSPMD-partitionable, so the kernel runs per shard inside a
+    shard_map — q/out sharded on S over ``seq_axes`` (Megatron-SP), k/v
+    replicated over them (GSPMD inserts the all-gather), everything
+    sharded on B over ``batch_axes``.  Each shard passes its global
+    ``q_base = shard_index * local_len`` into the kernel so causal and
+    window masks compare true sequence coordinates.
+
+    Works for ANY head count (llama4's 40, starcoder2's 36,
+    recurrentgemma's 10 — none divide the 16-wide model axis, which is
+    why head-sharding is not the lever here); requires S % prod(seq_axes)
+    == 0, B % prod(batch_axes) == 0 (caller degrades axes that don't
+    divide).  Backward = recompute through the pure-JAX chunked path
+    (flash semantics — no probs saved), which GSPMD shards on its own.
+    """
+    return _sfa_fwd_impl(q, k, v, window, block, interpret, mesh,
+                         seq_axes, batch_axes)
+
+
+def _sfa_fwd_impl(q, k, v, window, block, interpret, mesh, seq_axes,
+                  batch_axes):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    local = q.shape[1] // axes_size(mesh, seq_axes)
+    bspec = tuple(batch_axes) if batch_axes else None
+    sspec = tuple(seq_axes)
+
+    def body(qs, ks, vs):
+        base = 0
+        for a in seq_axes:
+            base = base * mesh.shape[a] + jax.lax.axis_index(a)
+        return flash_attention_fwd(
+            qs, ks, vs, window=window, blk_q=block, blk_k=block,
+            interpret=interpret, q_base=base * local)
+
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, sspec, None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, sspec, None, None),
+        check_rep=False,
+    )
+    return f(q, k, v)
+
+
+def _sfa_fwd(q, k, v, window, block, interpret, mesh, seq_axes,
+             batch_axes):
+    out = _sfa_fwd_impl(q, k, v, window, block, interpret, mesh,
+                        seq_axes, batch_axes)
+    return out, (q, k, v)
+
+
+def _sfa_bwd(window, block, interpret, mesh, seq_axes, batch_axes, res,
+             g_out):
+    return _fa_bwd(window, block, interpret, res, g_out)
+
+
+sharded_flash_attention.defvjp(_sfa_fwd, _sfa_bwd)

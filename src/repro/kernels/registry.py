@@ -34,7 +34,8 @@ import jax
 
 __all__ = [
     "KernelImpl", "register", "resolve", "impl_names", "backend",
-    "on_tpu", "auto_impl", "pallas_impl", "choose_blocks",
+    "on_tpu", "auto_impl", "pallas_impl", "donate_argnums",
+    "choose_blocks",
     "update_block_table", "save_block_table", "load_block_table",
     "block_candidates", "vmem_bytes", "table_key", "BLOCK_TABLE",
 ]
@@ -85,6 +86,15 @@ def auto_impl(op: str) -> str:
 def pallas_impl(op: str = "") -> str:
     """The kernel-body path for the current backend (interpret off-TPU)."""
     return "pallas" if on_tpu() else "pallas-interpret"
+
+
+def donate_argnums(*argnums: int) -> Tuple[int, ...]:
+    """THE donation policy for launch-shaped jits: donate on TPU (XLA
+    reuses the buffer for the output), empty elsewhere (an int32 output
+    can never alias an fp32 input on CPU, so donation would only warn).
+    Shared by the pipeline chunk fns and the streaming trainer so every
+    donating call site gates identically."""
+    return tuple(argnums) if on_tpu() else ()
 
 
 def resolve(op: str, impl: str | None = None) -> KernelImpl:

@@ -20,3 +20,25 @@ def make_local_mesh():
     CPU examples and the single-host training driver."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_data_mesh(ndev: int | None = None):
+    """A pure data-parallel (data=ndev, model=1) mesh over the first
+    ``ndev`` devices — the shape the streamed trainer shard_maps over.
+    ``None`` takes every device (same as make_local_mesh)."""
+    n = len(jax.devices()) if ndev is None else ndev
+    if n > len(jax.devices()):
+        raise ValueError(f"asked for {n} devices but only "
+                         f"{len(jax.devices())} exist")
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         devices=jax.devices()[:n])
+
+
+def data_axis_size(mesh) -> int:
+    """Number of devices along the ``data`` axis — the shard count for
+    every data-parallel launch (featurize chunks, minibatch grads)."""
+    if "data" not in mesh.shape:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} carry no 'data' axis; "
+            f"data-parallel paths shard over 'data' (see make_*_mesh)")
+    return mesh.shape["data"]

@@ -81,6 +81,31 @@ def tp_size() -> int:
     return size
 
 
+def _flash_shard_axes(b: int, s: int):
+    """Mesh axes for the shard_map'd flash path, or None when it can't
+    apply: q/out shard their SEQUENCE dim over the ``sp``/``tp`` axes
+    (must divide s); batch sharding over the ``batch`` axes is kept only
+    when b divides (degraded to replicated otherwise, matching the
+    `shard` helper's per-dim policy)."""
+    from repro.kernels.flash_attention import axes_size
+    rules = current_rules()
+    if rules is None:
+        return None
+    sax = rules.rules.get("sp") or rules.rules.get("tp")
+    seq_axes = (sax,) if isinstance(sax, str) else tuple(sax or ())
+    if not seq_axes:
+        return None
+    tp = axes_size(rules.mesh, seq_axes)
+    if tp <= 1 or s % tp:
+        return None
+    bax = rules.rules.get("batch")
+    batch_axes = (bax,) if isinstance(bax, str) else tuple(bax or ())
+    nb = axes_size(rules.mesh, batch_axes)
+    if nb > 1 and b % nb:
+        batch_axes = ()
+    return seq_axes, batch_axes, rules.mesh
+
+
 def _block_mask(sq: int, sk: int, off, window: int) -> Array:
     """m[i, j] = (j <= i + off) & (j > i + off - window)."""
     qi = jnp.arange(sq)[:, None]
@@ -334,21 +359,31 @@ def attention(params: dict, x: Array, cfg: ModelConfig, *,
             v_new = shard(v_new, "batch", "kv_seq", None, None)
         new_cache = KVCache(k=k_new, v=v_new, length=cache.length + s)
 
-    use_flash = (cfg.attn_impl == "flash" and tp == 1
-                 and (cache is None or s > 1) and s > cfg.attn_chunk)
+    flash_want = (cfg.attn_impl == "flash"
+                  and (cache is None or s > 1) and s > cfg.attn_chunk)
+    sharded_axes = _flash_shard_axes(b, s) if flash_want and tp > 1 else None
     if cache is not None and s == 1:
         q5 = q.reshape(b, s, g, r, dh)
         # rolling caches enforce the window structurally — no mask needed
         out = _decode_grouped(q5, new_cache,
                               window=0 if rolling else window)
         out = out.reshape(b, s, h, dh)
-    elif use_flash:
+    elif flash_want and tp == 1:
         # Pallas flash kernel: scores stay in VMEM (interpret mode off-TPU).
-        # Used when attention is not sharded (tp==1); the sharded path
-        # needs a shard_map wrapper (see DESIGN.md §7 / EXPERIMENTS §Perf).
         from repro.kernels.flash_attention import flash_attention
         out = flash_attention(q, k, v, window, cfg.attn_chunk,
                               jax.default_backend() != "tpu")
+    elif sharded_axes is not None:
+        # the production-mesh path: pallas_call is not GSPMD-partitionable,
+        # so the kernel runs per shard under a shard_map — q/out sequence-
+        # sharded over `model` (Megatron-SP; works for every head count),
+        # k/v all-gathered over it, each shard masking at its global
+        # q offset.  Backward recomputes via the pure-JAX chunked path.
+        from repro.kernels.flash_attention import sharded_flash_attention
+        seq_axes, batch_axes, mesh = sharded_axes
+        out = sharded_flash_attention(q, k, v, window, cfg.attn_chunk,
+                                      jax.default_backend() != "tpu",
+                                      mesh, seq_axes, batch_axes)
     elif heads_mode:
         kk = _repeat_kv(k, r)
         vv = _repeat_kv(v, r)

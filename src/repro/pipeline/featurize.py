@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -39,6 +40,7 @@ from repro.core.cws import (CWSParams, make_cws_params, cws_hash_reference,
 from repro.core.hashing import encode, feature_indices, hashed_dim
 from repro.core.regen import key_words
 from repro.kernels import ops, registry
+from repro.launch.mesh import data_axis_size
 
 Array = jax.Array
 
@@ -109,6 +111,7 @@ class FeaturePipeline:
         self.blocks = blocks
         self.row_chunk = row_chunk
         self._donating_chunk_fn = None
+        self._sharded_fns = {}         # (mesh, donate) -> jitted shard_map
         self._sliced_state = None      # cache: k-prefix slice of params
         self._sliced_from = None
 
@@ -172,7 +175,17 @@ class FeaturePipeline:
 
     # -- public API ----------------------------------------------------
 
-    def launch_chunk(self, xc: Array) -> Array:
+    def chunk_rows(self, mesh=None) -> int:
+        """The ONE streaming chunk shape for a (pipeline, mesh) config:
+        ``row_chunk`` unsharded, ``lcm(row_chunk, ndev)`` under a mesh —
+        every full chunk splits evenly over the ``data`` axis AND keeps
+        the unsharded chunk size as a divisor, so exactly one padded
+        chunk shape compiles per config (no per-chunk re-pad to ndev)."""
+        if mesh is None:
+            return self.row_chunk
+        return math.lcm(self.row_chunk, data_axis_size(mesh))
+
+    def launch_chunk(self, xc: Array, *, mesh=None) -> Array:
         """ONE donated kernel launch: xc (m, D) nonneg -> (m, k) int32
         embedding-bag indices.
 
@@ -182,52 +195,77 @@ class FeaturePipeline:
         across calls (pad ragged tails — all-zero pad rows land in bucket
         0 and slice off cleanly).  On TPU the chunk buffer is donated to
         the launch: hand over a buffer you are done with (a fresh batch
-        gather, a slice), never a live input array."""
+        gather, a slice), never a live input array.
+
+        With ``mesh`` the launch is shard_mapped over the ``data`` axis
+        (rows split across devices, hash state replicated); m must divide
+        by the axis size so every shard sees the same local shape."""
         self._require_bucketed("launch_chunk")
-        return self._chunk_fn()(xc, self._state())
+        if mesh is None:
+            return self._chunk_fn()(xc, self._state())
+        ndev = data_axis_size(mesh)
+        if xc.shape[0] % ndev:
+            raise ValueError(
+                f"launch_chunk under mesh= needs rows divisible by the "
+                f"data axis ({ndev}); got {xc.shape[0]} — pad the chunk "
+                f"(chunk_rows(mesh) gives the streaming shape)")
+        return self._sharded_chunk_fn(mesh)(xc, self._state())
 
-    def feature_chunks(self, x: Array, *, launch=None):
+    def feature_chunks(self, x: Array, *, launch=None, mesh=None):
         """Iterator form of ``features``: yields ``(lo, hi, idx[lo:hi])``
-        per ``row_chunk`` rows, so a consumer (the streaming trainer, a
-        chunked evaluator) can walk n >> row_chunk rows without ever
-        holding the full (n, k) index matrix.
+        per ``chunk_rows(mesh)`` rows, so a consumer (the streaming
+        trainer, a chunked evaluator) can walk n >> chunk rows without
+        ever holding the full (n, k) index matrix.
 
-        A ragged final chunk is padded up to ``row_chunk`` and the pad
+        A ragged final chunk is padded up to the chunk shape and the pad
         rows sliced off (all-zero rows map to sentinel -> bucket 0, then
         are discarded), so streaming compiles EXACTLY ONE chunk shape —
-        no recompile on the tail.  ``launch`` overrides the per-chunk
-        callable (the sharded path); default is the donating jitted
-        chunk fn."""
+        no recompile on the tail, sharded or not.  ``launch`` overrides
+        the per-chunk callable (tests); default is the donating jitted
+        chunk fn, shard_mapped over ``data`` when ``mesh`` is given."""
         self._require_bucketed("feature_chunks")
         n = x.shape[0]
-        fn = launch or self.launch_chunk
+        rows = self.chunk_rows(mesh)
+        ndev = 1 if mesh is None else data_axis_size(mesh)
+        fn = launch or (self.launch_chunk if mesh is None else
+                        functools.partial(self.launch_chunk, mesh=mesh))
         on_device = isinstance(x, jax.Array)
-        for lo in range(0, n, self.row_chunk):
-            hi = min(lo + self.row_chunk, n)
+        for lo in range(0, n, rows):
+            hi = min(lo + rows, n)
             # host-resident rows (numpy/memmap) slice on the host, so only
             # the chunk ever crosses to the device
             chunk = (jax.lax.slice_in_dim(x, lo, hi, axis=0) if on_device
                      else jnp.asarray(x[lo:hi]))
-            if hi - lo < self.row_chunk and n > self.row_chunk:
-                chunk = jnp.pad(chunk,
-                                ((0, self.row_chunk - (hi - lo)), (0, 0)))
-                yield lo, hi, fn(chunk)[:hi - lo]
+            m = hi - lo
+            # streamed ragged tails pad to the full chunk shape (the
+            # single-compile invariant); a lone short chunk (n <= rows)
+            # pads only to the data-axis multiple it must split into
+            target = rows if (m < rows and n > rows) else m + ((-m) % ndev)
+            if target > m:
+                chunk = jnp.pad(chunk, ((0, target - m), (0, 0)))
+                yield lo, hi, fn(chunk)[:m]
+            elif mesh is not None and launch is None and n <= rows:
+                # lone whole-array chunk: the full-range slice may alias
+                # the caller's live x on some backends — same policy as
+                # _features_sharded, never donate it
+                yield lo, hi, self._sharded_chunk_fn(
+                    mesh, donate=False)(chunk, self._state())
             else:
                 yield lo, hi, fn(chunk)
 
     def features(self, x: Array, *, mesh=None) -> Array:
         """x (n, D) nonneg -> embedding-bag indices (n, k) int32 into
-        ``num_features``.  Streams in ``row_chunk`` row chunks; with a
-        ``mesh`` the launch is shard_mapped over its ``data`` axis."""
+        ``num_features``.  Streams in ``chunk_rows(mesh)`` row chunks;
+        with a ``mesh`` every launch is shard_mapped over its ``data``
+        axis."""
         self._require_bucketed("features")
         n = x.shape[0]
         if n == 0:   # empty stream chunk: nothing to launch
             return jnp.zeros((0, self.spec.num_hashes), jnp.int32)
-        sharded = functools.partial(self._features_sharded, mesh=mesh)
-        if n <= self.row_chunk:
-            return self._launch(x) if mesh is None else sharded(x)
-        # streamed: unsharded chunks go through the donating chunk fn
-        return self._features_streamed(x, None if mesh is None else sharded)
+        if n <= self.chunk_rows(mesh):
+            return self._launch(x) if mesh is None else \
+                self._features_sharded(x, mesh)
+        return self._features_streamed(x, mesh=mesh)
 
     def hashes(self, x: Array):
         """Staged stage-1 escape hatch for estimator sweeps that reuse one
@@ -288,10 +326,9 @@ class FeaturePipeline:
         int32 output can never alias the fp32 chunk, so donation would only
         warn."""
         if self._donating_chunk_fn is None:
-            donate = (0,) if registry.on_tpu() else ()
             self._donating_chunk_fn = jax.jit(
                 lambda xc, state: self._launch_with(xc, state),
-                donate_argnums=donate)
+                donate_argnums=registry.donate_argnums(0))
         return self._donating_chunk_fn
 
     def _launch_with(self, x: Array, state) -> Array:
@@ -312,30 +349,62 @@ class FeaturePipeline:
         op = "cws_encode_rng" if self.param_free else "cws_encode"
         return self.impl or registry.auto_impl(op)
 
-    def _features_streamed(self, x: Array, launch=None) -> Array:
-        """Chunked launches keep peak memory at O(row_chunk * max(D, k))
-        on every path; the ragged tail is padded inside feature_chunks so
-        only one chunk shape ever compiles."""
+    def state_pspec(self):
+        """PartitionSpec for the replicated launch state: the (2,) key
+        words in param-free mode, each (D, k) CWSParams matrix otherwise.
+        Shared with the streamed trainer's shard_map in_specs."""
+        from jax.sharding import PartitionSpec as P
+        return P(None) if self.param_free else P(None, None)
+
+    def _sharded_chunk_fn(self, mesh, *, donate: bool = True):
+        """Jitted shard_map'd per-chunk launch over the mesh's ``data``
+        axis, cached per (mesh, donate): rows split across devices, hash
+        state replicated, each shard running the same kernel body as the
+        unsharded chunk fn.  ``donate=True`` (the streaming path, whose
+        chunks are fresh slice/pad buffers) donates the chunk per shard
+        on TPU; ``donate=False`` serves whole-array launches where the
+        buffer may alias the CALLER's live x (zero-pad pass-through)."""
+        key = (mesh, bool(donate))
+        fn = self._sharded_fns.get(key)
+        if fn is None:
+            from jax.experimental.shard_map import shard_map
+            body = shard_map(
+                lambda xs, ps: self._launch_with(xs, ps),
+                mesh=mesh,
+                in_specs=(self._rows_pspec(), self.state_pspec()),
+                out_specs=self._rows_pspec(),
+                check_rep=False,
+            )
+            donate_argnums = registry.donate_argnums(0) if donate else ()
+            fn = jax.jit(body, donate_argnums=donate_argnums)
+            self._sharded_fns[key] = fn
+        return fn
+
+    def _rows_pspec(self):
+        from jax.sharding import PartitionSpec as P
+        return P("data", None)
+
+    def _features_streamed(self, x: Array, *, launch=None,
+                           mesh=None) -> Array:
+        """Chunked launches keep peak memory at O(chunk * max(D, k)) on
+        every path; the ragged tail is padded inside feature_chunks so
+        only one chunk shape ever compiles, sharded or not."""
         return jnp.concatenate(
-            [out for _, _, out in self.feature_chunks(x, launch=launch)],
+            [out for _, _, out in self.feature_chunks(x, launch=launch,
+                                                      mesh=mesh)],
             axis=0)
 
     def _features_sharded(self, x: Array, mesh) -> Array:
-        from jax.experimental.shard_map import shard_map
-        from jax.sharding import PartitionSpec as P
-
-        ndev = mesh.shape["data"]
+        """One whole-array launch (n <= chunk_rows) shard_mapped over
+        ``data``: pad once to the axis multiple — with n < ndev some
+        shards are ALL pad rows, which featurize as all-zero rows ->
+        sentinel -> bucket 0 and slice off.  Never donating here: with
+        zero pad ``jnp.pad`` may pass x straight through, and donating
+        the caller's live array (or slicing [:n] out of its reclaimed
+        buffer) would invalidate it."""
+        ndev = data_axis_size(mesh)
         n = x.shape[0]
         pad = (-n) % ndev
         xp = jnp.pad(x, ((0, pad), (0, 0)))   # all-zero pad rows -> bucket 0
-        state = self._state()
-        # rows split over `data`; hash state (params or key) replicated
-        state_spec = P(None) if self.param_free else P(None, None)
-        f = shard_map(
-            lambda xs, ps: self._launch_with(xs, ps),
-            mesh=mesh,
-            in_specs=(P("data", None), state_spec),
-            out_specs=P("data", None),
-            check_rep=False,
-        )
-        return f(xp, state)[:n]
+        fn = self._sharded_chunk_fn(mesh, donate=False)
+        return fn(xp, self._state())[:n]

@@ -17,7 +17,9 @@ full (n, k) matrix never exists.  Peak working set (DESIGN.md §9):
                                   + its Adam moments
 
 — independent of n.  The raw (n, D) rows stay wherever the caller keeps
-them (host numpy is fine: the per-batch gather is the only device copy).
+them (host numpy is fine: the per-batch gather is the only device copy;
+device-resident jax.Arrays gather ON DEVICE through one jitted call and
+never bounce through host numpy).
 
 Epoch shuffling draws one permutation per epoch from ``shuffle_key``
 (ragged remainder dropped — a fresh permutation drops different rows each
@@ -27,6 +29,15 @@ gradient is order-invariant, and is then bit-identical to full-batch
 trainer's microbatch/donation machinery: grads via
 ``trainer.microbatch_grads`` and (params, opt state) donated on TPU so
 Adam updates the table in place.
+
+Data parallelism (DESIGN.md §11): pass ``mesh=`` to run every per-batch
+launch shard_mapped over the mesh's ``data`` axis — each device
+featurizes its shard of the minibatch with the pipeline kernel, computes
+local grads through the shared ``microbatch_grads`` path, grads/loss are
+psum'd inside it, and the optimizer update stays replicated.  On a
+1-device mesh this is bit-identical to the unsharded path under the same
+``shuffle_key``; on N devices the batch walk is identical and only
+gradient summation order differs (float reassociation).
 """
 from __future__ import annotations
 
@@ -36,12 +47,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
 from repro.core.linear_model import (LinearParams, TrainCfg, _loss_fn,
                                      bag_logits, make_linear_tx,
                                      validate_bag_features)
 from repro.kernels import registry
+from repro.launch.mesh import data_axis_size
 from repro.pipeline import FeaturePipeline
 from repro.training.trainer import microbatch_grads
 
@@ -53,7 +66,7 @@ __all__ = ["fit_linear_streamed", "streamed_accuracy"]
 def _make_update_step(cfg: TrainCfg, tx, n_micro: int):
     """One donated jitted update on a featurized minibatch — the bag
     head riding the trainer's microbatch/donation machinery."""
-    donate = (0, 1) if registry.on_tpu() else ()
+    donate = registry.donate_argnums(0, 1)
 
     def loss_fn(p, inputs, labels):
         return _loss_fn(p, inputs, labels, cfg, bag_logits), {}
@@ -68,10 +81,76 @@ def _make_update_step(cfg: TrainCfg, tx, n_micro: int):
     return update
 
 
+def _make_sharded_update_step(cfg: TrainCfg, tx, n_micro: int,
+                              pipe: FeaturePipeline, mesh, *,
+                              featurize: bool):
+    """The data-parallel update: ONE jitted launch per step that
+    shard_maps featurize+grads over the ``data`` axis and applies the
+    optimizer on the psum'd grads, replicated.
+
+    ``featurize=True`` takes the raw (bs, D) batch and runs the pipeline
+    kernel per shard (the per-step path); ``featurize=False`` takes
+    precomputed (bs, k) indices (the order-invariant batch_size == n
+    path, featurized once up front and REUSED across steps — so the
+    batch must NOT be donated there).  (params, opt state) are donated
+    on TPU, plus the per-step gather buffer when featurizing; the
+    pipeline's launch state rides along replicated and is never
+    donated."""
+    donate = (registry.donate_argnums(0, 1, 3) if featurize
+              else registry.donate_argnums(0, 1))
+
+    def loss_fn(p, inputs, labels):
+        return _loss_fn(p, inputs, labels, cfg, bag_logits), {}
+
+    def local_grads(params, pstate, xb, yb):
+        fb = pipe._launch_with(xb, pstate) if featurize else xb
+        # psum of loss/grads happens INSIDE the shared helper so the
+        # data-parallel all-reduce sits at one blessed point
+        loss, _, grads = microbatch_grads(
+            loss_fn, params, {"inputs": fb, "labels": yb},
+            n_micro=n_micro, axis_name="data")
+        return loss, grads
+
+    from jax.experimental.shard_map import shard_map
+    grads_fn = shard_map(
+        local_grads, mesh=mesh,
+        in_specs=(P(), pipe.state_pspec(), P("data", None), P("data")),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def update(params, state, pstate, xb, yb, i):
+        _, grads = grads_fn(params, pstate, xb, yb)
+        updates, state = tx.update(grads, state, params, i)
+        return optim.apply_updates(params, updates), state
+
+    return update
+
+
+def _make_device_gather(bs: int, mesh):
+    """One jitted per-batch gather for device-resident datasets: slice
+    the epoch permutation window and take rows/labels in a single
+    dispatch.  With a mesh the outputs land ALREADY SHARDED over
+    ``data`` (no host bounce, no post-hoc reshard)."""
+    kw = {}
+    if mesh is not None:
+        kw["out_shardings"] = (NamedSharding(mesh, P("data", None)),
+                               NamedSharding(mesh, P("data")))
+
+    @functools.partial(jax.jit, **kw)
+    def gather(x, labels, perm, pos):
+        idx = jax.lax.dynamic_slice_in_dim(perm, pos * bs, bs)
+        return jnp.take(x, idx, axis=0), jnp.take(labels, idx, axis=0)
+
+    return gather
+
+
 def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
                         x: Array, labels: Array, *, cfg: TrainCfg,
                         shuffle_key: Optional[Array] = None,
-                        n_microbatches: int = 1) -> LinearParams:
+                        n_microbatches: int = 1,
+                        mesh=None) -> LinearParams:
     """Minibatch SGD with featurization fused into the loop.
 
     ``x`` (n, D) raw nonneg rows; ``params`` a flat bag table built with
@@ -82,7 +161,13 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
     function matches bit-for-bit at ``batch_size == n``.
 
     Every batch launches the SAME (batch_size, D) chunk shape, so the
-    featurization kernel compiles exactly once per fit."""
+    featurization kernel compiles exactly once per fit.
+
+    ``mesh=`` runs the whole per-batch hot loop data-parallel: the batch
+    gather lands sharded over the ``data`` axis, each device featurizes
+    and differentiates its shard, grads are psum'd, and the optimizer
+    update is replicated.  ``batch_size`` must divide by the data-axis
+    size (each device sees a fixed local batch shape)."""
     n = x.shape[0]
     validate_bag_features(params, pipe.num_features)
     bs = cfg.batch_size
@@ -93,8 +178,14 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
             "materializes the full (n, k) index matrix)")
     if bs > n:
         raise ValueError(f"batch_size {bs} exceeds the {n} available rows")
-    if n_microbatches < 1 or bs % n_microbatches:
-        raise ValueError(f"batch_size {bs} must divide into "
+    ndev = 1 if mesh is None else data_axis_size(mesh)
+    if bs % ndev:
+        raise ValueError(
+            f"batch_size {bs} must divide by the mesh data axis ({ndev}) "
+            f"so every device sees the same local batch shape")
+    local_bs = bs // ndev
+    if n_microbatches < 1 or local_bs % n_microbatches:
+        raise ValueError(f"per-device batch {local_bs} must divide into "
                          f"{n_microbatches} microbatches")
     if labels.shape[0] != n:
         raise ValueError(f"labels {labels.shape} do not match x {x.shape}")
@@ -105,26 +196,41 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
         # the update step donates (params, state); the first call would
         # otherwise donate — and delete — the CALLER's init table
         params = jax.tree_util.tree_map(jnp.copy, params)
-    update = _make_update_step(cfg, tx, n_microbatches)
     steps_per_epoch = max(n // bs, 1)
     key = shuffle_key if shuffle_key is not None else jax.random.PRNGKey(0)
     shuffle = bs < n
 
     # host-resident datasets (numpy/memmap) are gathered on the HOST so
     # only the (bs, D) batch ever crosses to the device — the raw (n, D)
-    # rows never get a device copy; jax-array datasets gather on device.
+    # rows never get a device copy; jax-array datasets gather on device
+    # (one jitted call per batch, sharded outputs under a mesh).
     host_data = not isinstance(x, jax.Array)
-    if host_data:
+    if host_data and shuffle:
         labels_host = np.asarray(labels)
-    else:
+        batch_shardings = None if mesh is None else (
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P("data")))
+    elif shuffle:
         labels = jnp.asarray(labels)
+        gather = _make_device_gather(bs, mesh)
+
+    if mesh is None:
+        update = _make_update_step(cfg, tx, n_microbatches)
+    else:
+        update = _make_sharded_update_step(cfg, tx, n_microbatches, pipe,
+                                           mesh, featurize=shuffle)
+        pstate = pipe._state()
 
     if not shuffle:
         # batch_size == n: the gradient is order-invariant, so skip the
         # permutation AND the per-step re-featurization — one launch
         # sweep up front (peak (bs, k) = (n, k) is what bs = n asks for).
-        fb_full = pipe.features(jnp.asarray(x) if host_data else x)
+        fb_full = pipe.features(jnp.asarray(x) if host_data else x,
+                                mesh=mesh)
         yb_full = jnp.asarray(labels)
+        if mesh is not None:
+            yb_full = jax.device_put(yb_full,
+                                     NamedSharding(mesh, P("data")))
     perm = perm_host = None
     for i in range(cfg.steps):
         epoch, pos = divmod(i, steps_per_epoch)
@@ -136,25 +242,40 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
                     perm_host = np.asarray(perm)
             if host_data:
                 sel = perm_host[pos * bs:(pos + 1) * bs]
-                xb = jnp.asarray(x[sel])
-                yb = jnp.asarray(labels_host[sel])
+                xb, yb = x[sel], labels_host[sel]
+                if mesh is None:
+                    xb, yb = jnp.asarray(xb), jnp.asarray(yb)
+                else:
+                    # one host->device hop straight into the data layout
+                    xb = jax.device_put(xb, batch_shardings[0])
+                    yb = jax.device_put(yb, batch_shardings[1])
             else:
-                idx = jax.lax.dynamic_slice_in_dim(perm, pos * bs, bs)
-                xb = jnp.take(x, idx, axis=0)
-                yb = jnp.take(labels, idx, axis=0)
-            # the gather buffer is ours alone -> safe to donate to the
-            # featurization launch
-            fb = pipe.launch_chunk(xb)
+                xb, yb = gather(x, labels, perm, jnp.int32(pos))
+            if mesh is None:
+                # the gather buffer is ours alone -> safe to donate to
+                # the featurization launch
+                fb = pipe.launch_chunk(xb)
+                params, state, _ = update(params, state, fb, yb,
+                                          jnp.int32(i))
+                continue
+            # sharded: featurize runs INSIDE the update's shard_map
+            params, state = update(params, state, pstate, xb, yb,
+                                   jnp.int32(i))
+        elif mesh is None:
+            params, state, _ = update(params, state, fb_full, yb_full,
+                                      jnp.int32(i))
         else:
-            fb, yb = fb_full, yb_full
-        params, state, _ = update(params, state, fb, yb, jnp.int32(i))
+            params, state = update(params, state, pstate, fb_full,
+                                   yb_full, jnp.int32(i))
     return params
 
 
 def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
-                      x: Array, labels: Array) -> float:
+                      x: Array, labels: Array, *, mesh=None) -> float:
     """Accuracy over pipeline features without materializing (n, k):
-    walks ``pipe.feature_chunks`` and accumulates correct counts."""
+    walks ``pipe.feature_chunks`` and accumulates correct counts.  With
+    ``mesh=`` each chunk launch is shard_mapped over ``data`` (same
+    chunk walk, so the count — an integer — is identical)."""
     validate_bag_features(params, pipe.num_features)
     n = x.shape[0]
     if n == 0:
@@ -163,7 +284,7 @@ def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
     # accumulate on device: a host int() per chunk would serialize each
     # chunk's compute against the next chunk's dispatch
     correct = jnp.int32(0)
-    for lo, hi, fb in pipe.feature_chunks(x):
+    for lo, hi, fb in pipe.feature_chunks(x, mesh=mesh):
         pred = jnp.argmax(bag_logits(params, fb), axis=-1)
         correct = correct + jnp.sum((pred == labels[lo:hi])
                                     .astype(jnp.int32))

@@ -230,7 +230,8 @@ def input_specs(cfg: ModelConfig, rules: AxisRules, *, shape: str,
 def microbatch_grads(loss_fn: Callable, params: PyTree, batch: dict, *,
                      n_micro: int = 1,
                      accum_dtype=jnp.float32,
-                     constrain: Optional[Callable] = None):
+                     constrain: Optional[Callable] = None,
+                     axis_name: Optional[str] = None):
     """THE gradient-accumulation path: value_and_grad over ``n_micro``
     microbatches via lax.scan, shared by the LM train step below and the
     streaming bag trainer (repro.training.linear_trainer) so every head
@@ -239,14 +240,19 @@ def microbatch_grads(loss_fn: Callable, params: PyTree, batch: dict, *,
     ``loss_fn(params, inputs, labels) -> (loss, metrics)``; ``batch`` is
     ``{"inputs", "labels"}`` with leading dim divisible by ``n_micro``.
     ``constrain`` (optional) pins grad trees to a sharding layout — the
-    FSDP x TP reduce-scatter fix documented in make_train_step.  Returns
-    ``(mean loss, last-microbatch metrics, mean grads)``."""
+    FSDP x TP reduce-scatter fix documented in make_train_step.
+    ``axis_name`` (optional, shard_map bodies) pmeans loss and grads
+    over that mesh axis — the data-parallel all-reduce, applied HERE so
+    every caller's psum sits at the same point relative to microbatch
+    averaging.  Returns ``(mean loss, last-microbatch metrics, mean
+    grads)`` — means over the global batch when ``axis_name`` is set."""
     c = constrain or (lambda t: t)
     if n_micro == 1:
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch["inputs"],
                                    batch["labels"])
-        return loss, metrics, c(grads)
+        loss, grads = _pmean_loss_grads(loss, c(grads), axis_name)
+        return loss, metrics, grads
 
     def split(x):
         return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
@@ -268,7 +274,20 @@ def microbatch_grads(loss_fn: Callable, params: PyTree, batch: dict, *,
         accum, (g0, jnp.float32(0)), micro)
     metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
     grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
-    return loss_sum / n_micro, metrics, grads
+    loss, grads = _pmean_loss_grads(loss_sum / n_micro, grads, axis_name)
+    return loss, metrics, grads
+
+
+def _pmean_loss_grads(loss, grads, axis_name: Optional[str]):
+    """Cross-shard mean of (loss, grads) when running under shard_map.
+    A size-1 axis is numerically a no-op (psum of one shard, /1), which
+    keeps the 1-device sharded path bit-identical to the unsharded one."""
+    if axis_name is None:
+        return loss, grads
+    loss = jax.lax.pmean(loss, axis_name)
+    grads = jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g, axis_name), grads)
+    return loss, grads
 
 
 def make_optimizer(cfg: ModelConfig, hp: TrainHparams):
