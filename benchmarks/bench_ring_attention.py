@@ -1,0 +1,127 @@
+"""Ring vs all-gather sequence-parallel flash attention.
+
+Measures wall-clock parity of the two collective schedules on however
+many devices exist (the sharded-smoke CI job forces 8 host devices) and
+records the analytic per-device memory/overlap model for the ring
+(DESIGN.md §12):
+
+  * per-device peak K/V bytes — the all-gather wrapper materializes the
+    FULL (Sk, G, Dh) K and V on every device; the ring holds one shard
+    plus the in-flight double buffer, i.e. a ~N/2 x reduction that grows
+    linearly with ring size N;
+  * modeled overlap — per ring step, the ppermute moves one K/V shard
+    while the flash kernel consumes the previous one; the fraction of
+    the transfer hidden under compute is min(1, t_compute / t_comm) at
+    nominal TPU constants (declared in the JSON — this is a MODEL, the
+    CPU container cannot measure ICI).
+
+Wall-clock on this CPU container runs the kernel in interpret mode, so
+ring-vs-all-gather microseconds track trend only (the ring pays N
+interpreted launches); the collective win shows up on real hardware.
+
+    PYTHONPATH=src python -m benchmarks.bench_ring_attention --fast
+
+Emits benchmarks/results/BENCH_ring_attention.json (schema documented in
+docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import save_json, timed
+
+# nominal single-chip constants for the overlap MODEL (not measured):
+# dense-matmul throughput and per-direction ICI bandwidth of a current
+# TPU generation; swap for measured numbers when the harness runs on
+# real hardware.
+MXU_FLOPS_PER_S = 1.4e14
+ICI_BYTES_PER_S = 9.0e10
+
+
+def overlap_model(b, sq, sk, h, g, d, ndev, window):
+    """Per-ring-step compute/transfer model.  Causal masking halves the
+    average live score area; a window caps it at window/sk."""
+    live = 0.5 if window == 0 else min(0.5, window / sk)
+    flops = 4.0 * b * h * (sq / ndev) * (sk / ndev) * d * live
+    comm = 2.0 * b * (sk / ndev) * g * d * 4      # K and V, fp32
+    t_comp = flops / MXU_FLOPS_PER_S
+    t_comm = comm / ICI_BYTES_PER_S
+    return {
+        "flops_per_step": flops,
+        "comm_bytes_per_step": comm,
+        "mxu_flops_per_s": MXU_FLOPS_PER_S,
+        "ici_bytes_per_s": ICI_BYTES_PER_S,
+        "t_compute_us": t_comp * 1e6,
+        "t_comm_us": t_comm * 1e6,
+        "comm_hidden_fraction": min(1.0, t_comp / t_comm),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="small shapes for CI smoke")
+    ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    ndev = len(jax.devices())
+    mesh = jax.make_mesh((1, ndev), ("data", "model"))
+    if args.fast:
+        b, s, h, g, d, block = 1, 512, 4, 2, 32, 64
+    else:
+        b, s, h, g, d, block = 1, 4096, 8, 2, 64, 256
+
+    from repro.kernels.flash_attention import (ring_flash_attention,
+                                               sharded_flash_attention)
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, g, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, g, d))
+    interpret = jax.default_backend() != "tpu"
+
+    ring = jax.jit(lambda q, k, v: ring_flash_attention(
+        q, k, v, args.window, block, interpret, mesh, ("model",), ()))
+    allg = jax.jit(lambda q, k, v: sharded_flash_attention(
+        q, k, v, args.window, block, interpret, mesh, ("model",), ()))
+
+    out_ring, us_ring = timed(ring, q, k, v, repeats=args.repeats)
+    out_allg, us_allg = timed(allg, q, k, v, repeats=args.repeats)
+    parity = float(jnp.abs(out_ring - out_allg).max())
+    assert parity < 1e-3, f"ring diverged from all-gather: {parity}"
+
+    kv_shard = s * g * d * 4                      # one of K or V, fp32
+    peak_allgather = 2 * kv_shard                 # full K + V per device
+    peak_ring = 2 * 2 * kv_shard // ndev          # shard x double buffer
+    result = {
+        "ndev": ndev,
+        "ring_size": ndev,
+        "backend": jax.default_backend(),
+        "shape": {"b": b, "s_q": s, "s_k": s, "h": h, "g": g, "d": d,
+                  "block": block, "window": args.window},
+        "wall_us_ring": round(us_ring, 1),
+        "wall_us_allgather": round(us_allg, 1),
+        "parity_max_abs_diff": parity,
+        "peak_kv_bytes_allgather": peak_allgather,
+        "peak_kv_bytes_ring": peak_ring,
+        "kv_bytes_reduction": peak_allgather / peak_ring,
+        "modeled_overlap": overlap_model(b, s, s, h, g, d, ndev,
+                                         args.window),
+        "measured": ["wall_us_ring", "wall_us_allgather",
+                     "parity_max_abs_diff"],
+        "modeled": ["peak_kv_bytes_allgather", "peak_kv_bytes_ring",
+                    "kv_bytes_reduction", "modeled_overlap"],
+    }
+    save_json("BENCH_ring_attention", result)
+    print(f"ndev={ndev} ring {us_ring:.0f}us vs all-gather {us_allg:.0f}us"
+          f" | per-device peak K/V {peak_ring} vs {peak_allgather} bytes"
+          f" ({result['kv_bytes_reduction']:.1f}x) | parity {parity:.2e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -150,6 +150,51 @@ def _min_sum_ref(x, y, *, bm, bn, bd):
     return ref.min_sum_ref(x, y)
 
 
+# --- sequence-parallel attention family ----------------------------------
+#
+# Impl names differ from the cws/min_sum pattern because the interesting
+# axis here is the COLLECTIVE schedule, not the kernel body: `reference`
+# (naive oracle), `flash` (the unsharded Pallas kernel; interpret
+# off-TPU), `flash_allgather` (shard_map wrapper, K/V gathered over the
+# seq axes) and `flash_ring` (K/V ring schedule with compute-overlapped
+# ppermute, DESIGN.md §12).  All four share one signature so benches and
+# parity tests swap them by name.
+
+@registry.register("attention", "reference")
+def _attention_ref(q, k, v, *, window, block, mesh=None, seq_axes=(),
+                   batch_axes=()):
+    from repro.models.attention import _naive_grouped
+    b, s, h, d = q.shape
+    g = k.shape[2]
+    q5 = q.reshape(b, s, g, h // g, d)
+    return _naive_grouped(q5, k, v, window=window).reshape(b, s, h, d)
+
+
+@registry.register("attention", "flash")
+def _attention_flash(q, k, v, *, window, block, mesh=None, seq_axes=(),
+                     batch_axes=()):
+    from repro.kernels.flash_attention import flash_attention
+    return flash_attention(q, k, v, window, block, not registry.on_tpu())
+
+
+@registry.register("attention", "flash_allgather")
+def _attention_allgather(q, k, v, *, window, block, mesh, seq_axes,
+                         batch_axes=()):
+    from repro.kernels.flash_attention import sharded_flash_attention
+    return sharded_flash_attention(q, k, v, window, block,
+                                   not registry.on_tpu(), mesh,
+                                   tuple(seq_axes), tuple(batch_axes))
+
+
+@registry.register("attention", "flash_ring")
+def _attention_ring(q, k, v, *, window, block, mesh, seq_axes,
+                    batch_axes=()):
+    from repro.kernels.flash_attention import ring_flash_attention
+    return ring_flash_attention(q, k, v, window, block,
+                                not registry.on_tpu(), mesh,
+                                tuple(seq_axes), tuple(batch_axes))
+
+
 # ---------------------------------------------------------------------------
 # public wrappers (stable signatures; dispatch through the registry)
 # ---------------------------------------------------------------------------
@@ -231,6 +276,29 @@ def min_sum(x: jax.Array, y: jax.Array, *, bm: int | None = None,
                             bm, bn, bd, op="min_sum")
     fn = registry.resolve("min_sum", _impl_name(interpret, impl)).fn
     return fn(x, y, bm=bm_, bn=bn_, bd=bd_)
+
+
+def seq_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  window: int = 0, block: int = 256,
+                  impl: str | None = None, mesh=None,
+                  seq_axes=("model",), batch_axes=()) -> jax.Array:
+    """Registry-dispatched attention: q (B, Sq, H, D), k/v (B, Sk, G, D)
+    -> (B, Sq, H, D).  ``impl=None`` picks ``flash`` without a mesh and
+    routes ring-vs-all-gather through ``use_ring`` with one; explicit
+    names (``reference`` / ``flash`` / ``flash_allgather`` /
+    ``flash_ring``) pin a schedule for parity tests and benchmarks."""
+    if impl is None:
+        if mesh is None:
+            impl = "flash"
+        else:
+            from repro.kernels.flash_attention import use_ring
+            from repro.launch.mesh import axis_size
+            impl = ("flash_ring"
+                    if use_ring(k.shape[1], axis_size(mesh, seq_axes))
+                    else "flash_allgather")
+    fn = registry.resolve("attention", impl).fn
+    return fn(q, k, v, window=window, block=block, mesh=mesh,
+              seq_axes=seq_axes, batch_axes=batch_axes)
 
 
 # re-export oracles for test convenience

@@ -42,3 +42,18 @@ def data_axis_size(mesh) -> int:
             f"mesh axes {tuple(mesh.shape)} carry no 'data' axis; "
             f"data-parallel paths shard over 'data' (see make_*_mesh)")
     return mesh.shape["data"]
+
+
+def axis_size(mesh, axes) -> int:
+    """Product of the named mesh axis sizes.  ``axes`` is a name, a tuple
+    of names, or None/() -> 1.  THE one spot that turns an axis-name
+    spec into a shard count — shared by the attention routing
+    (ring-vs-all-gather threshold) and the flash shard_map wrappers."""
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size

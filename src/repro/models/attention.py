@@ -377,13 +377,24 @@ def attention(params: dict, x: Array, cfg: ModelConfig, *,
         # the production-mesh path: pallas_call is not GSPMD-partitionable,
         # so the kernel runs per shard under a shard_map — q/out sequence-
         # sharded over `model` (Megatron-SP; works for every head count),
-        # k/v all-gathered over it, each shard masking at its global
-        # q offset.  Backward recomputes via the pure-JAX chunked path.
-        from repro.kernels.flash_attention import sharded_flash_attention
+        # each shard masking at its global q offset.  Short sequences
+        # all-gather K/V (one fused collective); past attn_ring_min_sk the
+        # ring schedule keeps K/V sharded and pipelines ppermute steps
+        # against the flash loop (DESIGN.md §12).  Backward: all-gather
+        # recomputes via the pure-JAX chunked path, ring runs the reverse
+        # ring with recompute.
+        from repro.kernels.flash_attention import (ring_flash_attention,
+                                                   sharded_flash_attention,
+                                                   use_ring)
+        from repro.launch.mesh import axis_size
         seq_axes, batch_axes, mesh = sharded_axes
-        out = sharded_flash_attention(q, k, v, window, cfg.attn_chunk,
-                                      jax.default_backend() != "tpu",
-                                      mesh, seq_axes, batch_axes)
+        fn = ring_flash_attention if use_ring(
+            k.shape[1], axis_size(mesh, seq_axes),
+            threshold=cfg.attn_ring_min_sk or None) else \
+            sharded_flash_attention
+        out = fn(q, k, v, window, cfg.attn_chunk,
+                 jax.default_backend() != "tpu", mesh, seq_axes,
+                 batch_axes)
     elif heads_mode:
         kk = _repeat_kv(k, r)
         vv = _repeat_kv(v, r)

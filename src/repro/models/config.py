@@ -62,6 +62,12 @@ class ModelConfig:
     scan_layers: bool = True
     attn_impl: str = "chunked"             # naive | chunked (online softmax)
     attn_chunk: int = 512
+    # sequence-parallel flash: K/V ring schedule kicks in at S_k >= this
+    # (below it the all-gather wrapper wins — see kernels/flash_attention
+    # use_ring and DESIGN.md §12); 0 defers to the library default
+    # (kernels/flash_attention.RING_MIN_SK, 4096) so retuning it there
+    # retunes every config-routed layer
+    attn_ring_min_sk: int = 0
     loss_chunk: int = 1024                 # CE computed over seq chunks
     vocab_pad_multiple: int = 256
 

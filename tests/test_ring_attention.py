@@ -1,0 +1,219 @@
+"""Ring-scheduled K/V flash attention parity: ring == all-gather ==
+unsharded kernel == naive oracle, fwd and grads, across causal/window
+masks, S_q != S_k, head counts that do not divide the ring, and ring
+sizes 1 and N (N = whatever the host exposes; the sharded-smoke CI job
+forces 8 devices so the model axis takes 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import (flash_attention_fwd,
+                                           flash_attention_step,
+                                           ring_flash_attention,
+                                           sharded_flash_attention,
+                                           use_ring, RING_MIN_SK)
+from repro.kernels.ops import seq_attention
+from repro.models.attention import _naive_grouped
+
+
+def naive_ref(q, k, v, window):
+    b, sq, h, d = q.shape
+    g = k.shape[2]
+    q5 = q.reshape(b, sq, g, h // g, d)
+    return _naive_grouped(q5, k, v, window=window).reshape(b, sq, h, d)
+
+
+def make_qkv(key, b, sq, sk, h, g, d):
+    q = jax.random.normal(key, (b, sq, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, g, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, g, d))
+    return q, k, v
+
+
+def ring_mesh():
+    """model axis = the ring: 4 of the forced 8 in sharded-smoke, all
+    devices otherwise."""
+    n = len(jax.devices())
+    model = 4 if n >= 8 else n
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])
+
+
+class TestStepKernel:
+    """flash_attention_step: chaining it over k-blocks with carried
+    (m, l, acc) must reproduce the one-shot kernel — the invariant the
+    ring schedule is built on."""
+
+    def test_chained_blocks_match_one_shot(self):
+        key = jax.random.PRNGKey(0)
+        b, s, h, g, d, blk = 1, 128, 4, 2, 16, 32
+        q, k, v = make_qkv(key, b, s, s, h, g, d)
+        for window in (0, 48):
+            full = flash_attention_fwd(q, k, v, window=window, blk_q=blk,
+                                       blk_k=blk, interpret=True)
+            carry = None
+            for lo in range(0, s, blk):
+                carry = flash_attention_step(
+                    q, k[:, lo:lo + blk], v[:, lo:lo + blk], carry,
+                    q_base=0, k_base=jnp.int32(lo), window=window,
+                    blk_q=blk, blk_k=blk, interpret=True)
+            m, l, acc = carry
+            out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_pad_rows_never_alias_next_shard(self):
+        """A k shard whose length does not divide blk_k pads internally;
+        the k_valid mask must keep pad rows out of the softmax (they
+        would otherwise impersonate the NEXT shard's global positions)."""
+        key = jax.random.PRNGKey(1)
+        b, s, h, g, d = 1, 64, 2, 2, 16
+        q, k, v = make_qkv(key, b, s, s, h, g, d)
+        full = flash_attention_fwd(q, k, v, blk_q=32, blk_k=32,
+                                   interpret=True)
+        carry = None
+        for lo, ln in ((0, 48), (48, 16)):   # ragged vs blk_k=32 splits
+            carry = flash_attention_step(
+                q, k[:, lo:lo + ln], v[:, lo:lo + ln], carry, q_base=0,
+                k_base=jnp.int32(lo), blk_q=32, blk_k=32, interpret=True)
+        m, l, acc = carry
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRingParity:
+    # h=10, g=5 deliberately does not divide a 4-wide ring; h=4, g=4 is
+    # MHA under a sliding window
+    @pytest.mark.parametrize("h,g,window", [(8, 2, 0), (10, 5, 64),
+                                            (4, 4, 32)])
+    def test_fwd_matches_allgather_and_unsharded(self, h, g, window):
+        mesh = ring_mesh()
+        key = jax.random.PRNGKey(h)
+        b, s, d = 2, 128, 16
+        q, k, v = make_qkv(key, b, s, s, h, g, d)
+        batch_axes = ("data",) if b % mesh.shape["data"] == 0 else ()
+        ring = ring_flash_attention(q, k, v, window, 32, True, mesh,
+                                    ("model",), batch_axes)
+        ag = sharded_flash_attention(q, k, v, window, 32, True, mesh,
+                                     ("model",), batch_axes)
+        un = flash_attention_fwd(q, k, v, window=window, blk_q=32,
+                                 blk_k=32, interpret=True)
+        ref = naive_ref(q, k, v, window)
+        for got in (ring, ag, un):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("sq,sk,window", [(64, 128, 0), (128, 64, 96),
+                                              (64, 128, 48)])
+    def test_fwd_sq_ne_sk(self, sq, sk, window):
+        """Prefill-style decoupled lengths: both Sq and Sk shard over the
+        ring, each at its own per-shard length.  (The Sq > Sk window is
+        >= Sq - Sk + 1 so every q row keeps at least one valid key — rows
+        with an empty mask are undefined in every implementation.)"""
+        mesh = ring_mesh()
+        key = jax.random.PRNGKey(sq + sk)
+        q, k, v = make_qkv(key, 1, sq, sk, 4, 2, 16)
+        ring = ring_flash_attention(q, k, v, window, 32, True, mesh,
+                                    ("model",), ())
+        ag = sharded_flash_attention(q, k, v, window, 32, True, mesh,
+                                     ("model",), ())
+        ref = naive_ref(q, k, v, window)
+        np.testing.assert_allclose(np.asarray(ring), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(ring), np.asarray(ag),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [0, 48])
+    def test_grads_match_naive_and_allgather(self, window):
+        mesh = ring_mesh()
+        key = jax.random.PRNGKey(3)
+        q, k, v = make_qkv(key, 1, 128, 128, 4, 2, 16)
+
+        def loss(fn):
+            return lambda q, k, v: jnp.sum(fn(q, k, v) ** 2)
+
+        g_ring = jax.grad(loss(lambda q, k, v: ring_flash_attention(
+            q, k, v, window, 32, True, mesh, ("model",), ())),
+            argnums=(0, 1, 2))(q, k, v)
+        g_ag = jax.grad(loss(lambda q, k, v: sharded_flash_attention(
+            q, k, v, window, 32, True, mesh, ("model",), ())),
+            argnums=(0, 1, 2))(q, k, v)
+        g_ref = jax.grad(loss(lambda q, k, v: naive_ref(q, k, v, window)),
+                         argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g_ring, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=5e-3, atol=5e-3)
+        for a, b_ in zip(g_ring, g_ag):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=5e-3, atol=5e-3)
+
+    def test_grads_sq_ne_sk(self):
+        mesh = ring_mesh()
+        key = jax.random.PRNGKey(5)
+        q, k, v = make_qkv(key, 1, 64, 128, 4, 2, 16)
+        g_ring = jax.grad(lambda q, k, v: jnp.sum(ring_flash_attention(
+            q, k, v, 0, 32, True, mesh, ("model",), ()) ** 2),
+            argnums=(0, 1, 2))(q, k, v)
+        g_ref = jax.grad(lambda q, k, v: jnp.sum(
+            naive_ref(q, k, v, 0) ** 2), argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g_ring, g_ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=5e-3, atol=5e-3)
+
+    def test_ring_of_one(self):
+        """ndev=1 degenerates to a single step with no ppermute and must
+        still match — the shape every 1-device CI run exercises."""
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             devices=jax.devices()[:1])
+        key = jax.random.PRNGKey(9)
+        q, k, v = make_qkv(key, 1, 96, 96, 6, 3, 16)
+        ring = ring_flash_attention(q, k, v, 0, 32, True, mesh,
+                                    ("model",), ())
+        ref = naive_ref(q, k, v, 0)
+        np.testing.assert_allclose(np.asarray(ring), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRoutingAndRegistry:
+    def test_use_ring_predicate(self):
+        assert not use_ring(RING_MIN_SK, 1)          # no ring to run
+        assert use_ring(RING_MIN_SK, 4)
+        assert not use_ring(RING_MIN_SK - 4, 4)      # below threshold
+        assert not use_ring(RING_MIN_SK + 2, 4)      # does not divide
+        assert use_ring(128, 4, threshold=128)       # knob override
+
+    def test_registry_impls_agree(self):
+        mesh = ring_mesh()
+        key = jax.random.PRNGKey(2)
+        q, k, v = make_qkv(key, 1, 128, 128, 8, 2, 16)
+        ref = seq_attention(q, k, v, window=0, block=32, impl="reference")
+        for name in ("flash", "flash_allgather", "flash_ring"):
+            out = seq_attention(q, k, v, window=0, block=32, impl=name,
+                                mesh=mesh)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_attention_layer_routes_ring(self):
+        """attention() with attn_ring_min_sk at/below S must take the
+        ring path and match the unsharded layer output."""
+        if len(jax.devices()) < 2:
+            pytest.skip("needs a model axis wider than 1")
+        from repro.models.attention import attention, init_attention
+        from repro.models.config import ModelConfig
+        from repro.models.sharding import make_rules, use_rules
+        cfg = ModelConfig(name="t", n_layers=1, d_model=64, n_heads=4,
+                          n_kv_heads=2, d_ff=128, vocab=128,
+                          attn_impl="flash", attn_chunk=32,
+                          attn_ring_min_sk=128)
+        params = init_attention(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 64))
+        pos = jnp.arange(128)[None, :].repeat(2, 0)
+        ref, _ = attention(params, x, cfg, kind="global", positions=pos)
+        with use_rules(make_rules(ring_mesh())):
+            out, _ = attention(params, x, cfg, kind="global",
+                               positions=pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-3, atol=2e-3)

@@ -1,0 +1,131 @@
+"""docs-smoke harness: the docs cannot rot silently.
+
+Two phases over README.md + docs/*.md (the user-facing docs; DESIGN.md
+is an internals notebook and is covered only by the path lint):
+
+  1. **snippets** — every fenced ```python block is executed, each in a
+     fresh namespace, in file order.  Blocks are self-contained by
+     convention (use ```text for shell lines and non-runnable sketches).
+  2. **lint** — every dotted ``repro.*`` reference must resolve by
+     import + getattr, and every referenced repo file path
+     (src/..., tools/..., benchmarks/..., tests/..., examples/...,
+     docs/..., .github/...) must exist on disk.
+
+Run what CI runs:
+
+    PYTHONPATH=src python -m tools.run_doc_snippets
+
+Exit code: 0 green, 1 any failure (each failure is printed).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import pathlib
+import re
+import sys
+import traceback
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+SYMBOL_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+PATH_RE = re.compile(
+    r"\b(?:src/repro|tools|benchmarks|tests|examples|docs|\.github)"
+    r"/[\w./-]*\.(?:py|md|json|ya?ml|ini|txt)\b")
+
+
+def doc_files(extra=()):
+    files = [ROOT / "README.md"]
+    files += sorted((ROOT / "docs").glob("*.md"))
+    files += [pathlib.Path(p) for p in extra]
+    return [f for f in files if f.exists()]
+
+
+def extract_snippets(text: str):
+    """(line_number, source) per fenced python block."""
+    out = []
+    for m in FENCE_RE.finditer(text):
+        line = text[:m.start()].count("\n") + 2   # first line inside fence
+        out.append((line, m.group(1)))
+    return out
+
+
+def run_snippets(path: pathlib.Path) -> list[str]:
+    failures = []
+    for line, src in extract_snippets(path.read_text()):
+        ns = {"__name__": "__doc_snippet__"}
+        try:
+            exec(compile(src, f"{path.name}:{line}", "exec"), ns)
+        except Exception:
+            failures.append(
+                f"{path.name}:{line}: snippet raised\n"
+                + "".join(traceback.format_exc(limit=3)))
+    return failures
+
+
+def resolve_symbol(dotted: str) -> bool:
+    """Import the longest module prefix of ``dotted``, then walk the
+    remaining parts as attributes."""
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[i:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def lint(path: pathlib.Path) -> list[str]:
+    failures = []
+    text = path.read_text()
+    for dotted in sorted(set(SYMBOL_RE.findall(text))):
+        if not resolve_symbol(dotted):
+            failures.append(f"{path.name}: `{dotted}` does not resolve "
+                            f"(import/getattr failed)")
+    for rel in sorted(set(PATH_RE.findall(text))):
+        if not (ROOT / rel).exists():
+            failures.append(f"{path.name}: referenced file `{rel}` "
+                            f"does not exist")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--snippets-only", action="store_true")
+    ap.add_argument("--extra", nargs="*", default=(),
+                    help="additional markdown files to check")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for path in doc_files(args.extra):
+        if not args.lint_only:
+            failures += run_snippets(path)
+        if not args.snippets_only:
+            failures += lint(path)
+        print(f"checked {path.relative_to(ROOT)}", flush=True)
+    # DESIGN.md prose references internal paths too — path-lint it even
+    # though its snippets/symbols are internals-only
+    if not args.snippets_only:
+        design = ROOT / "DESIGN.md"
+        if design.exists():
+            failures += [f for f in lint(design) if "referenced file" in f]
+            print("checked DESIGN.md (paths only)", flush=True)
+
+    for f in failures:
+        print(f"FAIL {f}", file=sys.stderr, flush=True)
+    n_ok = "all green" if not failures else f"{len(failures)} failure(s)"
+    print(f"docs-smoke: {n_ok}")
+    # a raw count would wrap modulo 256 in the process exit status
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
