@@ -1,0 +1,122 @@
+"""Bit-packed feature encoding: accuracy / model bytes / bandwidth sweep.
+
+The packed emit kernels shrink feature traffic from 4 bytes per hash to
+b/8 bytes (b = b_i + b_t in {1, 2, 4, 8}); this bench quantifies the
+whole trade across b vs the int32 baseline on the paper's training
+recipe (streamed minibatch SGD over the fused pipeline):
+
+  * test accuracy per b (packed) vs the unpacked b = 8 baseline —
+    packed and unpacked training at the SAME b are bit-identical, so
+    any accuracy gap in the sweep is the b-bit truncation itself, never
+    the packing;
+  * model table bytes: the truncated k * 2^b embedding-bag table;
+  * feature bandwidth, modeled (exact byte counts) and measured (wall
+    time of a featurization pass over the test split).
+
+Emits BENCH_packed_features.json; asserts the ISSUE 6 gates AFTER
+persisting (>= 8x modeled bandwidth reduction at b = 4, <= 0.5 pp
+accuracy gap packed-vs-unpacked at b = 8).
+
+    python -m benchmarks.bench_packed_features [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, timed
+from repro.core.linear_model import TrainCfg, init_bag, init_bag_packed
+from repro.data.synthetic import make_template_classification
+from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.training import fit_linear_streamed, streamed_accuracy
+
+BS = (1, 2, 4, 8)
+K = 128          # k % (32/b) == 0 for every b -> modeled ratio is 32/b exact
+
+
+def _fit_eval(pipe, table, xtr, ytr, xte, yte, *, n_classes, steps, bs):
+    cfg = TrainCfg(n_classes=n_classes, steps=steps, lr=0.05, l2=1e-5,
+                   batch_size=bs)
+    p = fit_linear_streamed(table, pipe, xtr, ytr, cfg=cfg,
+                            shuffle_key=jax.random.PRNGKey(7))
+    return streamed_accuracy(p, pipe, xte, yte), p
+
+
+def run(fast: bool = False):
+    ds = make_template_classification(
+        1, n_classes=10, density=0.15, mult_noise=1.2, spike_prob=0.08,
+        name="template-hard")
+    xtr, xte = jnp.asarray(ds.x_train), jnp.asarray(ds.x_test)
+    ytr, yte = jnp.asarray(ds.y_train), jnp.asarray(ds.y_test)
+    n_classes = ds.n_classes
+    steps = 60 if fast else 250
+    bs = 256
+    n_te = int(xte.shape[0])
+    dim = int(xtr.shape[1])
+    key = jax.random.PRNGKey(0)
+
+    # int32 baseline: unpacked pipeline at the widest swept b
+    b_base = max(BS)
+    base_pipe = FeaturePipeline.create(
+        key, dim, FeatureSpec(K, b_i=b_base))
+    base_table = init_bag(jax.random.PRNGKey(1), base_pipe.num_features,
+                          n_classes)
+    base_acc, base_p = _fit_eval(base_pipe, base_table, xtr, ytr, xte, yte,
+                                 n_classes=n_classes, steps=steps, bs=bs)
+    _, base_us = timed(lambda: base_pipe.features(xte), repeats=2)
+    base_bytes = n_te * K * 4            # (n, k) int32
+    base_model = int(base_p.w.nbytes + base_p.b.nbytes)
+    emit("packed/baseline-int32", base_us,
+         f"b={b_base} acc={base_acc*100:.1f} feat_bytes={base_bytes}")
+
+    out = {"k": K, "n_test": n_te, "steps": steps,
+           "baseline": {"b": b_base, "accuracy": base_acc,
+                        "feature_bytes": base_bytes,
+                        "model_bytes": base_model,
+                        "featurize_us": base_us},
+           "per_b": {}}
+    for b in BS:
+        spec = FeatureSpec(K, b_i=b, packed=True)
+        pipe = FeaturePipeline.create(key, dim, spec)
+        table = init_bag_packed(jax.random.PRNGKey(1), K, b, n_classes)
+        acc, p = _fit_eval(pipe, table, xtr, ytr, xte, yte,
+                           n_classes=n_classes, steps=steps, bs=bs)
+        _, us = timed(lambda: pipe.features(xte), repeats=2)
+        feat_bytes = n_te * spec.packed_words * 4      # (n, words) uint32
+        ratio = base_bytes / feat_bytes                # modeled: 32/b at K
+        out["per_b"][str(b)] = {
+            "accuracy": acc,
+            "accuracy_gap_pp": (base_acc - acc) * 100,
+            "feature_bytes": feat_bytes,
+            "modeled_bandwidth_reduction": ratio,
+            "model_bytes": int(p.w.nbytes + p.b.nbytes),
+            "featurize_us": us,
+        }
+        emit(f"packed/b{b}", us,
+             f"acc={acc*100:.1f} bytes={feat_bytes} ratio={ratio:.1f}x")
+
+    save_json("BENCH_packed_features", out)
+
+    # acceptance gates (checked AFTER the JSON is on disk)
+    r4 = out["per_b"]["4"]["modeled_bandwidth_reduction"]
+    assert r4 >= 8.0, f"modeled reduction at b=4 is {r4:.2f}x, need >= 8x"
+    gap8 = out["per_b"]["8"]["accuracy_gap_pp"]
+    assert gap8 <= 0.5, (f"packed b=8 trails the unpacked baseline by "
+                         f"{gap8:.2f} pp, need <= 0.5")
+    print(f"OK: b=4 reduction {r4:.1f}x, b=8 gap {gap8:.2f} pp")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: fewer SGD steps")
+    args = ap.parse_args(argv)
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

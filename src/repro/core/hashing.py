@@ -78,6 +78,64 @@ def feature_indices(codes: Array, *, b_i: int, b_t: int = 0) -> Array:
     return (offs + safe).astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# bit-packed b-bit codes (b = b_i + b_t): k codes per row pack into
+# ceil(k*b/32) uint32 words, word-aligned per row.  This is the storage
+# format of the packed emit kernels (kernels/cws_hash.py) and the input
+# format of bag_logits_packed — feature bytes shrink 32/b x vs int32.
+# ---------------------------------------------------------------------------
+
+PACKED_BITS = (1, 2, 4, 8)   # word-aligned b values the packed format serves
+
+
+def check_packed_bits(b: int) -> int:
+    """Codes-per-word for a legal packed bit width; loud otherwise."""
+    if b not in PACKED_BITS:
+        raise ValueError(
+            f"packed encoding needs b = b_i + b_t in {PACKED_BITS} "
+            f"(codes must tile uint32 words); got b = {b}")
+    return 32 // b
+
+
+def packed_width(k: int, b: int) -> int:
+    """uint32 words per row for k b-bit codes (word-aligned rows)."""
+    cpw = check_packed_bits(b)
+    return -(-k // cpw)
+
+
+def pack_codes(codes: Array, *, b: int) -> Array:
+    """(..., k) int32 per-hash codes -> (..., ceil(k*b/32)) uint32 words.
+
+    Code j of a row lands in word j // (32/b) at bit offset
+    (j % (32/b)) * b.  Sentinel codes (-1, all-zero rows) pack as 0 —
+    the SAME bucket-0 aliasing the unpacked pipeline bakes into its
+    indices — and the trailing pad bits of the last word are zero."""
+    cpw = check_packed_bits(b)
+    k = codes.shape[-1]
+    w = packed_width(k, b)
+    safe = jnp.where(codes < 0, 0, codes).astype(jnp.uint32)
+    safe = jnp.bitwise_and(safe, jnp.uint32((1 << b) - 1))
+    pad = [(0, 0)] * (codes.ndim - 1) + [(0, w * cpw - k)]
+    safe = jnp.pad(safe, pad).reshape(codes.shape[:-1] + (w, cpw))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * b)
+    return jnp.sum(safe << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(packed: Array, k: int, *, b: int) -> Array:
+    """Exact inverse of ``pack_codes``: (..., ceil(k*b/32)) uint32 ->
+    (..., k) int32 codes in [0, 2^b) (sentinels come back as 0)."""
+    cpw = check_packed_bits(b)
+    if packed.shape[-1] != packed_width(k, b):
+        raise ValueError(
+            f"packed width mismatch: got {packed.shape[-1]} words but "
+            f"k = {k} at b = {b} packs into {packed_width(k, b)}")
+    col = jnp.arange(k, dtype=jnp.int32)
+    words = packed[..., col // cpw]
+    shifts = ((col % cpw) * b).astype(jnp.uint32)
+    return jnp.bitwise_and(words >> shifts,
+                           jnp.uint32((1 << b) - 1)).astype(jnp.int32)
+
+
 def one_hot_features(codes: Array, *, b_i: int, b_t: int = 0) -> Array:
     """Dense 0/1 matrix (n, k * 2^{b_i+b_t}). For small problems/tests only."""
     idx = feature_indices(codes, b_i=b_i, b_t=b_t)

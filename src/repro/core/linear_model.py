@@ -93,14 +93,79 @@ def bag_logits(params: LinearParams, idx: Array) -> Array:
                     axis=0).sum(axis=1) + params.b
 
 
-def validate_bag_features(params: LinearParams, num_features: int) -> None:
-    """Trace-time guard wiring a (F, C) table to a feature space: a table
-    whose row count differs from the pipeline's ``num_features`` makes
-    every bag_logits gather clamp (logits silently corrupted), so fail
-    where the sizes are both known instead."""
+def bag_logits_packed(params: LinearParams, packed: Array, *,
+                      num_hashes: int, b: int) -> Array:
+    """Embedding-bag logits straight from bit-packed features.
+
+    packed: (n, ceil(num_hashes*b/32)) uint32 words as emitted by
+    FeaturePipeline(packed=True) / cws_encode_packed.  Unpacks in
+    registers (shift/mask — the packed words never round-trip through an
+    int32 feature matrix), rebuilds the global indices
+    ``j * 2^b + code_j``, and gathers the flat (num_hashes * 2^b, C)
+    table exactly like ``bag_logits`` — same clamp policy, and sentinels
+    were already folded to bucket 0 at pack time.  Bit-identical to
+    ``bag_logits(params, unpacked_indices)`` by construction."""
+    from repro.core.hashing import packed_width, unpack_codes
+    if packed.ndim != 2:
+        raise ValueError(f"packed features must be (n, words); "
+                         f"got {packed.shape}")
+    if packed.dtype != jnp.uint32:
+        raise ValueError(f"packed features must be uint32 words; "
+                         f"got {packed.dtype}")
+    if packed.shape[-1] != packed_width(num_hashes, b):
+        raise ValueError(
+            f"packed width mismatch: got {packed.shape[-1]} words but "
+            f"{num_hashes} hashes at b = {b} pack into "
+            f"{packed_width(num_hashes, b)}")
     if params.w.ndim != 2:
         raise ValueError("bag params must be a flat (F, C) table "
                          f"(init_bag); got w {params.w.shape}")
+    num_features = params.w.shape[0]
+    if num_features != num_hashes * (1 << b):
+        raise ValueError(
+            f"feature-table mismatch: table has {num_features} rows but "
+            f"{num_hashes} hashes at b = {b} index {num_hashes * (1 << b)} "
+            f"features; build with init_bag_packed(key, num_hashes, b, C)")
+    codes = unpack_codes(packed, num_hashes, b=b)
+    offs = jnp.arange(num_hashes, dtype=jnp.int32) * (1 << b)
+    idx = (offs + codes).astype(jnp.int32)
+    return jnp.take(params.w, idx.clip(0, num_features - 1),
+                    axis=0).sum(axis=1) + params.b
+
+
+def init_bag_packed(key: Array, num_hashes: int, b: int,
+                    n_classes: int) -> LinearParams:
+    """Flat table sized for packed b-bit features: (num_hashes * 2^b, C).
+    The truncated-width twin of ``init_bag`` — at b = 4 the table is
+    2^(full-4) x smaller than the untruncated space."""
+    from repro.core.hashing import check_packed_bits
+    check_packed_bits(b)
+    return init_bag(key, num_hashes * (1 << b), n_classes)
+
+
+def validate_bag_features(params: LinearParams, num_features: int, *,
+                          spec=None) -> None:
+    """Trace-time guard wiring a (F, C) table to a feature space: a table
+    whose row count differs from the pipeline's ``num_features`` makes
+    every bag_logits gather clamp (logits silently corrupted), so fail
+    where the sizes are both known instead.
+
+    Pass the pipeline's FeatureSpec via ``spec`` when it may be packed:
+    a packed spec additionally pins the expected feature width to
+    ``ceil(k*b/32)`` uint32 words so the packed/unpacked surfaces can't
+    be cross-wired silently (the trainer does this for you)."""
+    if params.w.ndim != 2:
+        raise ValueError("bag params must be a flat (F, C) table "
+                         f"(init_bag); got w {params.w.shape}")
+    if spec is not None and getattr(spec, "packed", False):
+        expected = spec.num_hashes * (1 << spec.bits)
+        if params.w.shape[0] != expected:
+            raise ValueError(
+                f"feature-table mismatch: table has {params.w.shape[0]} "
+                f"rows but the packed pipeline ({spec.num_hashes} hashes "
+                f"at b = {spec.bits}) indexes {expected} features; build "
+                f"with init_bag_packed(key, num_hashes, b, n_classes)")
+        return
     if params.w.shape[0] != num_features:
         raise ValueError(
             f"feature-table mismatch: table has {params.w.shape[0]} rows "

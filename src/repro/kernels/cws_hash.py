@@ -27,6 +27,15 @@ Two emit variants share the accumulation loop:
 Zero entries (log u = -inf) never win the argmin; all-zero rows return the
 sentinel i* = -1 (matching repro.core.cws semantics), which the fused
 kernel maps to bucket 0 of its hash (matching core.hashing.feature_indices).
+
+PACKED emit variants (``cws_encode_packed_pallas`` /
+``cws_encode_rng_packed_pallas``) share the same accumulation loop and
+``_encode_emit`` body but pack the b = b_i + b_t bit codes of each grid
+step's BK hashes into uint32 words in VMEM (b in {1, 2, 4, 8},
+word-aligned per row, shift/or only — no gathers): output traffic drops
+from 4·BN·BK bytes per tile to b/8·BN·BK.  Hash columns past the real k
+are zeroed before packing so pad bits are deterministic zeros, and the
+word layout matches ``core.hashing.pack_codes`` bit-for-bit.
 """
 from __future__ import annotations
 
@@ -37,9 +46,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.hashing import check_packed_bits, packed_width
 from repro.core.regen import key_words, regen_tile
 
 NEG_SENTINEL = -1
+
+
+def _packed_bk(bk: int, k: int, b: int) -> int:
+    """Legal hash-block size for the packed emit: a multiple of the
+    32/b codes-per-word (so every grid step packs whole words), no
+    larger than k rounded up to a whole word."""
+    cpw = check_packed_bits(b)
+    bk = min(bk, -(-k // cpw) * cpw)
+    return -(-bk // cpw) * cpw
 
 
 def _accum_loop(logu, r_ref, logc_ref, beta_ref, d_step, bd, carry):
@@ -93,10 +112,12 @@ def _cws_kernel(x_ref, r_ref, logc_ref, beta_ref, istar_ref, tstar_ref,
 
 
 def _cws_encode_kernel(x_ref, r_ref, logc_ref, beta_ref, idx_ref, *scratch,
-                       bd: int, n_d_steps: int, b_i: int, b_t: int, bk: int):
+                       bd: int, n_d_steps: int, b_i: int, b_t: int, bk: int,
+                       packed: bool = False, num_hashes: int = 0):
     """Fused CWS -> b-bit code -> embedding-bag index.  ``scratch`` is
     (best_a, best_i) for the 0-bit scheme (b_t == 0) and
-    (best_a, best_i, best_t) when t* bits are kept."""
+    (best_a, best_i, best_t) when t* bits are kept.  ``packed=True``
+    emits bit-packed uint32 words instead of int32 indices."""
     d_step = pl.program_id(2)
     hash_block = pl.program_id(1)
     best_a, best_i = scratch[0], scratch[1]
@@ -123,20 +144,43 @@ def _cws_encode_kernel(x_ref, r_ref, logc_ref, beta_ref, idx_ref, *scratch,
     def _emit():
         idx_ref[...] = _encode_emit(best_i[...],
                                     best_t[...] if b_t else None,
-                                    hash_block, bk, b_i, b_t)
+                                    hash_block, bk, b_i, b_t,
+                                    packed=packed, num_hashes=num_hashes)
 
 
-def _encode_emit(i, best_t, hash_block, bk, b_i, b_t):
+def _pack_words(code, b):
+    """(BN, BK) b-bit codes -> (BN, BK*b/32) uint32 words via shift/or
+    over the 32/b strided lane phases (no gathers; lane j of word w is
+    code column w*(32/b)+j at bit offset j*b — the core.hashing.pack_codes
+    layout)."""
+    cpw = 32 // b
+    c = code.astype(jnp.uint32)
+    packed = jnp.zeros((code.shape[0], code.shape[1] // cpw), jnp.uint32)
+    for j in range(cpw):
+        packed = packed | (c[:, j::cpw] << jnp.uint32(j * b))
+    return packed
+
+
+def _encode_emit(i, best_t, hash_block, bk, b_i, b_t, *, packed=False,
+                 num_hashes=0):
     """b-bit code + sentinel handling + per-hash offset: the shared emit
-    step of the fused featurization kernels (stored and rng variants)."""
+    step of the fused featurization kernels (stored and rng variants).
+
+    ``packed=True`` skips the per-hash offset, zeroes the codes of pad
+    hash columns (>= num_hashes — their packed bits share words with
+    real codes, so they must be deterministic), and packs the
+    b = b_i + b_t bit codes into uint32 words."""
     code = i if b_i == 0 else jnp.bitwise_and(i, (1 << b_i) - 1)
     if b_t:
         t = jnp.clip(best_t, -2 ** 30, 2 ** 30).astype(jnp.int32)
         code = code * (1 << b_t) + jnp.bitwise_and(t, (1 << b_t) - 1)
     code = jnp.where(i < 0, 0, code)               # sentinel -> bucket 0
-    width = jnp.int32(1 << (b_i + b_t))
     col = jax.lax.broadcasted_iota(jnp.int32, code.shape, 1)
     hash_id = hash_block * bk + col                # global hash index
+    if packed:
+        code = jnp.where(hash_id < num_hashes, code, 0)
+        return _pack_words(code, b_i + b_t)
+    width = jnp.int32(1 << (b_i + b_t))
     return hash_id * width + code
 
 
@@ -290,7 +334,8 @@ def _cws_hash_rng_kernel(x_ref, key_ref, istar_ref, tstar_ref,
 
 def _cws_encode_rng_kernel(x_ref, key_ref, idx_ref, r_s, c_s, b_s, *scratch,
                            bd: int, n_d_steps: int, b_i: int, b_t: int,
-                           bk: int):
+                           bk: int, packed: bool = False,
+                           num_hashes: int = 0):
     d_step = pl.program_id(2)
     hash_block = pl.program_id(1)
     best_a, best_i = scratch[0], scratch[1]
@@ -318,7 +363,8 @@ def _cws_encode_rng_kernel(x_ref, key_ref, idx_ref, r_s, c_s, b_s, *scratch,
     def _emit():
         idx_ref[...] = _encode_emit(best_i[...],
                                     best_t[...] if b_t else None,
-                                    hash_block, bk, b_i, b_t)
+                                    hash_block, bk, b_i, b_t,
+                                    packed=packed, num_hashes=num_hashes)
 
 
 def _rng_setup(x, num_hashes, bn, bk, bd):
@@ -420,3 +466,106 @@ def cws_encode_rng_pallas(x: jax.Array, key: jax.Array, num_hashes: int, *,
         interpret=interpret,
     )(xp, kw)
     return idx[:n, :num_hashes]
+
+
+# ---------------------------------------------------------------------------
+# bit-packed emit variants: b = b_i + b_t bit codes -> uint32 words
+# ---------------------------------------------------------------------------
+#
+# Same grid, same accumulation loop, same scratch as the unpacked encode
+# kernels — only the emit differs: per (BN, BK) tile the codes pack into
+# (BN, BK·b/32) uint32 words in VMEM before the single HBM write, so
+# output traffic drops 32/b x.  BK is legalized to a multiple of the
+# 32/b codes-per-word so every grid step owns whole words, and pad hash
+# columns (>= num_hashes) zero their bits (they share words with real
+# codes at ragged k·b).  The row dimension needs no care: rows pack
+# independently (word-aligned), pad rows slice off as usual.
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b_i", "b_t", "bn", "bk", "bd",
+                                    "interpret"))
+def cws_encode_packed_pallas(x: jax.Array, r: jax.Array, log_c: jax.Array,
+                             beta: jax.Array, *, b_i: int, b_t: int = 0,
+                             bn: int = 128, bk: int = 128, bd: int = 256,
+                             interpret: bool = False) -> jax.Array:
+    """Fused featurization with bit-packed output: x (n, D) nonneg ->
+    (n, ceil(k·b/32)) uint32 words, b = b_i + b_t in {1, 2, 4, 8}.
+
+    Bit-exact vs ``pack_codes(encode(cws_hash(...)))``: word w of a row
+    holds codes [w·32/b, (w+1)·32/b) at bit offsets (j mod 32/b)·b, and
+    ``core.hashing.unpack_codes`` recovers the unpacked codes exactly.
+    """
+    n, d = x.shape
+    k = r.shape[1]
+    b = b_i + b_t
+    bn, bd = min(bn, n), min(bd, d)
+    bk = _packed_bk(bk, k, b)
+    xp, rp, lcp, bep = _pad_operands(x, r, log_c, beta, bn, bk, bd)
+    np_, dp_, kp_ = xp.shape[0], xp.shape[1], rp.shape[1]
+    n_d_steps = dp_ // bd
+    bw = bk * b // 32                       # packed words per hash block
+
+    scratch = [pltpu.VMEM((bn, bk), jnp.float32),    # best log_a
+               pltpu.VMEM((bn, bk), jnp.int32)]      # best index
+    if b_t:
+        scratch.append(pltpu.VMEM((bn, bk), jnp.float32))   # best t
+
+    in_specs, _ = _cws_specs(bn, bk, bd)
+    out_spec = pl.BlockSpec((bn, bw), lambda i, j, s: (i, j))
+    kernel = functools.partial(_cws_encode_kernel, bd=bd,
+                               n_d_steps=n_d_steps, b_i=b_i, b_t=b_t,
+                               bk=bk, packed=True, num_hashes=k)
+    words = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, kp_ * b // 32), jnp.uint32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, rp, lcp, bep)
+    return words[:n, :packed_width(k, b)]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_hashes", "b_i", "b_t", "bn", "bk",
+                                    "bd", "interpret"))
+def cws_encode_rng_packed_pallas(x: jax.Array, key: jax.Array,
+                                 num_hashes: int, *, b_i: int, b_t: int = 0,
+                                 bn: int = 128, bk: int = 128, bd: int = 256,
+                                 interpret: bool = False) -> jax.Array:
+    """Zero-parameter-traffic fused featurization with bit-packed output:
+    x (n, D) nonneg + PRNG key -> (n, ceil(num_hashes·b/32)) uint32.  The
+    only HBM input is x and the only HBM output is the packed words."""
+    n, d = x.shape
+    b = b_i + b_t
+    k0, k1 = key_words(key)
+    kw = jnp.stack([k0, k1])
+    bk = _packed_bk(bk, num_hashes, b)
+    xp, kp_, bn, bk, bd, in_specs, _ = _rng_setup(
+        x, num_hashes + ((-num_hashes) % bk), bn, bk, bd)
+    np_, dp_ = xp.shape
+    n_d_steps = dp_ // bd
+    bw = bk * b // 32
+
+    scratch = _param_scratch(bd, bk) + [
+        pltpu.VMEM((bn, bk), jnp.float32),       # best log_a
+        pltpu.VMEM((bn, bk), jnp.int32)]         # best index
+    if b_t:
+        scratch.append(pltpu.VMEM((bn, bk), jnp.float32))    # best t
+
+    out_spec = pl.BlockSpec((bn, bw), lambda i, j, s: (i, j))
+    kernel = functools.partial(_cws_encode_rng_kernel, bd=bd,
+                               n_d_steps=n_d_steps, b_i=b_i, b_t=b_t,
+                               bk=bk, packed=True, num_hashes=num_hashes)
+    words = pl.pallas_call(
+        kernel,
+        grid=(np_ // bn, kp_ // bk, n_d_steps),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, kp_ * b // 32), jnp.uint32),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp, kw)
+    return words[:n, :packed_width(num_hashes, b)]

@@ -22,7 +22,9 @@ from repro.kernels import ref
 from repro.kernels import registry
 from repro.kernels.cws_hash import (cws_hash_pallas, cws_encode_pallas,
                                     cws_hash_rng_pallas,
-                                    cws_encode_rng_pallas)
+                                    cws_encode_rng_pallas,
+                                    cws_encode_packed_pallas,
+                                    cws_encode_rng_packed_pallas)
 from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
 
 
@@ -118,6 +120,58 @@ def _cws_encode_rng_ref(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
                                        bd=bd)
     codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
     return core_hashing.feature_indices(codes, b_i=b_i, b_t=b_t)
+
+
+# --- bit-packed emit featurization families -------------------------------
+#
+# Same CWS + b-bit encode semantics as cws_encode / cws_encode_rng, but
+# the output is ceil(k*b/32) uint32 words per row (b = b_i + b_t in
+# {1, 2, 4, 8}) instead of k int32 indices: feature output traffic
+# shrinks 32/b x.  All impls agree bit-for-bit with
+# ``pack_codes(encode(<hash variant>))``.
+
+@registry.register("cws_encode_packed", "pallas", requires=("tpu",))
+def _cws_encode_packed_tpu(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_packed_pallas(x, params.r, params.log_c, params.beta,
+                                    b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd,
+                                    interpret=False)
+
+
+@registry.register("cws_encode_packed", "pallas-interpret")
+def _cws_encode_packed_interp(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_packed_pallas(x, params.r, params.log_c, params.beta,
+                                    b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd,
+                                    interpret=True)
+
+
+@registry.register("cws_encode_packed", "reference")
+def _cws_encode_packed_ref(x, params: CWSParams, *, b_i, b_t, bn, bk, bd):
+    i_star, t_star = _cws_hash_ref(x, params, bn=bn, bk=bk, bd=bd)
+    codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
+    return core_hashing.pack_codes(codes, b=b_i + b_t)
+
+
+@registry.register("cws_encode_rng_packed", "pallas", requires=("tpu",))
+def _cws_encode_rng_packed_tpu(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
+    return cws_encode_rng_packed_pallas(x, key, num_hashes, b_i=b_i,
+                                        b_t=b_t, bn=bn, bk=bk, bd=bd,
+                                        interpret=False)
+
+
+@registry.register("cws_encode_rng_packed", "pallas-interpret")
+def _cws_encode_rng_packed_interp(x, key, num_hashes, *, b_i, b_t, bn, bk,
+                                  bd):
+    return cws_encode_rng_packed_pallas(x, key, num_hashes, b_i=b_i,
+                                        b_t=b_t, bn=bn, bk=bk, bd=bd,
+                                        interpret=True)
+
+
+@registry.register("cws_encode_rng_packed", "reference")
+def _cws_encode_rng_packed_ref(x, key, num_hashes, *, b_i, b_t, bn, bk, bd):
+    i_star, t_star = _cws_hash_rng_ref(x, key, num_hashes, bn=bn, bk=bk,
+                                       bd=bd)
+    codes = core_hashing.encode(i_star, t_star, b_i=b_i, b_t=b_t)
+    return core_hashing.pack_codes(codes, b=b_i + b_t)
 
 
 @registry.register("minmax_gram", "pallas", requires=("tpu",))
@@ -255,6 +309,34 @@ def cws_encode_rng(x: jax.Array, key: jax.Array, num_hashes: int, *,
     bn, bk, bd = _blocks(x.shape[0], x.shape[1], num_hashes,
                          bn, bk, bd, op="cws_rng")
     fn = registry.resolve("cws_encode_rng", _impl_name(interpret, impl)).fn
+    return fn(x, key, num_hashes, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
+
+
+def cws_encode_packed(x: jax.Array, params: CWSParams, *, b_i: int,
+                      b_t: int = 0, bn: int | None = None,
+                      bk: int | None = None, bd: int | None = None,
+                      interpret: bool | None = None,
+                      impl: str | None = None) -> jax.Array:
+    """Fused featurization, bit-packed output: x (n, D) nonneg ->
+    (n, ceil(k·b/32)) uint32 words, b = b_i + b_t in {1, 2, 4, 8}."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], params.num_hashes,
+                         bn, bk, bd, op="cws_packed")
+    fn = registry.resolve("cws_encode_packed",
+                          _impl_name(interpret, impl)).fn
+    return fn(x, params, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
+
+
+def cws_encode_rng_packed(x: jax.Array, key: jax.Array, num_hashes: int, *,
+                          b_i: int, b_t: int = 0, bn: int | None = None,
+                          bk: int | None = None, bd: int | None = None,
+                          interpret: bool | None = None,
+                          impl: str | None = None) -> jax.Array:
+    """Zero-parameter-traffic fused featurization, bit-packed output:
+    x (n, D) nonneg + PRNG key -> (n, ceil(num_hashes·b/32)) uint32."""
+    bn, bk, bd = _blocks(x.shape[0], x.shape[1], num_hashes,
+                         bn, bk, bd, op="cws_rng_packed")
+    fn = registry.resolve("cws_encode_rng_packed",
+                          _impl_name(interpret, impl)).fn
     return fn(x, key, num_hashes, b_i=b_i, b_t=b_t, bn=bn, bk=bk, bd=bd)
 
 

@@ -148,11 +148,20 @@ _VMEM_MODELS: Dict[str, Callable[[int, int, int], int]] = {
     # x tile + 3 regenerated param tiles (scratch, single-buffered — no
     # pipelined second copy) + 3 accumulators + 2 output tiles
     "cws_rng": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk + 5 * bn * bk),
+    # packed-emit twins: the int32 output tile shrinks to bn*bk*b/32
+    # uint32 words — modeled at the widest packed b (8 -> bk/4 words),
+    # so every legal b fits whatever these admit
+    "cws_packed": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk
+                                          + 4 * bn * bk) + bn * bk,
+    "cws_rng_packed": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk
+                                              + 4 * bn * bk) + bn * bk,
     # x tile + y tile + accumulator + output tile
     "min_sum": lambda bm, bn, bd: 4 * (bm * bd + bn * bd + 2 * bm * bn),
 }
 _FAMILY_ALIASES = {"gram": "min_sum", "cws_hash": "cws", "cws_encode": "cws",
                    "cws_hash_rng": "cws_rng", "cws_encode_rng": "cws_rng",
+                   "cws_encode_packed": "cws_packed",
+                   "cws_encode_rng_packed": "cws_rng_packed",
                    "minmax_gram": "min_sum"}
 
 

@@ -37,7 +37,9 @@ import jax.numpy as jnp
 
 from repro.core.cws import (CWSParams, make_cws_params, cws_hash_reference,
                             cws_hash_regen)
-from repro.core.hashing import encode, feature_indices, hashed_dim
+from repro.core.hashing import (encode, feature_indices, hashed_dim,
+                                check_packed_bits, pack_codes, packed_width,
+                                unpack_codes)
 from repro.core.regen import key_words
 from repro.kernels import ops, registry
 from repro.launch.mesh import data_axis_size
@@ -51,14 +53,33 @@ class FeatureSpec:
 
     ``b_i = 0`` keeps i* in full (the paper's "0-bit" refers to t*);
     ``b_t = 0`` discards t* entirely — the paper's proposed scheme, and the
-    one the fused kernel serves with zero t* traffic."""
+    one the fused kernel serves with zero t* traffic.
+
+    ``packed = True`` switches the pipeline's output format to bit-packed
+    codes: ``features``/``launch_chunk``/``feature_chunks`` emit
+    ``(n, ceil(k*b/32))`` uint32 words (b = b_i + b_t in {1, 2, 4, 8})
+    instead of (n, k) int32 indices — 32/b x less feature traffic, fed
+    directly to ``linear_model.bag_logits_packed``.  Requires b_i >= 1
+    (packing is a bucketed-code format) — enforced at pipeline
+    construction."""
     num_hashes: int
     b_i: int
     b_t: int = 0
+    packed: bool = False
 
     @property
     def width(self) -> int:
         return 1 << (self.b_i + self.b_t)
+
+    @property
+    def bits(self) -> int:
+        """Code bit width b = b_i + b_t (the packed formats' b)."""
+        return self.b_i + self.b_t
+
+    @property
+    def packed_words(self) -> int:
+        """uint32 words per row in packed mode: ceil(k*b/32)."""
+        return packed_width(self.num_hashes, self.bits)
 
     @property
     def num_features(self) -> int:
@@ -107,6 +128,11 @@ class FeaturePipeline:
             self.dim = params.dim
         self.params = params
         self.spec = spec
+        if spec.packed:
+            # loud at construction, not first launch: packed output is a
+            # bucketed-code format (b_i >= 1) at a word-tiling b
+            self._require_bucketed("FeatureSpec(packed=True)")
+            check_packed_bits(spec.bits)
         self.impl = impl
         self.blocks = blocks
         self.row_chunk = row_chunk
@@ -149,11 +175,14 @@ class FeaturePipeline:
     def _launch(self, x: Array) -> Array:
         bn, bk, bd = self.blocks or (None, None, None)
         if self.param_free:
-            return ops.cws_encode_rng(
+            fn = (ops.cws_encode_rng_packed if self.spec.packed
+                  else ops.cws_encode_rng)
+            return fn(
                 x, self._key_words, self.spec.num_hashes, b_i=self.spec.b_i,
                 b_t=self.spec.b_t, bn=bn, bk=bk, bd=bd,
                 impl=self._resolved_impl())
-        return ops.cws_encode(
+        fn = ops.cws_encode_packed if self.spec.packed else ops.cws_encode
+        return fn(
             x, self._state(), b_i=self.spec.b_i, b_t=self.spec.b_t,
             bn=bn, bk=bk, bd=bd, impl=self._resolved_impl())
 
@@ -255,12 +284,15 @@ class FeaturePipeline:
 
     def features(self, x: Array, *, mesh=None) -> Array:
         """x (n, D) nonneg -> embedding-bag indices (n, k) int32 into
-        ``num_features``.  Streams in ``chunk_rows(mesh)`` row chunks;
-        with a ``mesh`` every launch is shard_mapped over its ``data``
-        axis."""
+        ``num_features`` — or, with ``spec.packed``, bit-packed codes
+        (n, ``spec.packed_words``) uint32.  Streams in
+        ``chunk_rows(mesh)`` row chunks; with a ``mesh`` every launch is
+        shard_mapped over its ``data`` axis."""
         self._require_bucketed("features")
         n = x.shape[0]
         if n == 0:   # empty stream chunk: nothing to launch
+            if self.spec.packed:
+                return jnp.zeros((0, self.spec.packed_words), jnp.uint32)
             return jnp.zeros((0, self.spec.num_hashes), jnp.int32)
         if n <= self.chunk_rows(mesh):
             return self._launch(x) if mesh is None else \
@@ -285,10 +317,26 @@ class FeaturePipeline:
 
     def features_from_hashes(self, i_star: Array, t_star: Array) -> Array:
         """Stage 2+3 on precomputed hashes (columns may be pre-sliced to a
-        k prefix; offsets follow the column count)."""
+        k prefix; offsets follow the column count).  In packed mode the
+        codes bit-pack instead of expanding to global indices — the same
+        output format as ``features``."""
         self._require_bucketed("features_from_hashes")
         codes = encode(i_star, t_star, b_i=self.spec.b_i, b_t=self.spec.b_t)
+        if self.spec.packed:
+            return pack_codes(codes, b=self.spec.bits)
         return feature_indices(codes, b_i=self.spec.b_i, b_t=self.spec.b_t)
+
+    def unpack_features(self, packed: Array) -> Array:
+        """Packed words -> the (n, k) int32 GLOBAL bag indices the
+        unpacked pipeline would have emitted (decode oracle; also the
+        bridge to index-consuming evaluators).  Bit-exact inverse of the
+        packed emit."""
+        if not self.spec.packed:
+            raise ValueError("unpack_features needs a packed=True spec")
+        codes = unpack_codes(packed, self.spec.num_hashes, b=self.spec.bits)
+        offs = jnp.arange(self.spec.num_hashes, dtype=jnp.int32) * \
+            self.spec.width
+        return (offs + codes).astype(jnp.int32)
 
     def codes(self, x: Array) -> Array:
         """Per-hash codes WITHOUT feature offsets (collision estimators);
@@ -334,20 +382,24 @@ class FeaturePipeline:
     def _launch_with(self, x: Array, state) -> Array:
         """One kernel launch on explicit state (CWSParams or key words)."""
         fam = "cws_rng" if self.param_free else "cws"
+        if self.spec.packed:
+            fam += "_packed"
         bn, bk, bd = self.blocks or registry.choose_blocks(
             x.shape[0], x.shape[1], self.spec.num_hashes, op=fam)
         if self.param_free:
-            fn = registry.resolve("cws_encode_rng",
-                                  self._resolved_impl()).fn
+            fn = registry.resolve(self._op_name(), self._resolved_impl()).fn
             return fn(x, state, self.spec.num_hashes, b_i=self.spec.b_i,
                       b_t=self.spec.b_t, bn=bn, bk=bk, bd=bd)
-        fn = registry.resolve("cws_encode", self._resolved_impl()).fn
+        fn = registry.resolve(self._op_name(), self._resolved_impl()).fn
         return fn(x, state, b_i=self.spec.b_i, b_t=self.spec.b_t,
                   bn=bn, bk=bk, bd=bd)
 
-    def _resolved_impl(self) -> str:
+    def _op_name(self) -> str:
         op = "cws_encode_rng" if self.param_free else "cws_encode"
-        return self.impl or registry.auto_impl(op)
+        return op + "_packed" if self.spec.packed else op
+
+    def _resolved_impl(self) -> str:
+        return self.impl or registry.auto_impl(self._op_name())
 
     def state_pspec(self):
         """PartitionSpec for the replicated launch state: the (2,) key

@@ -51,8 +51,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import optim
 from repro.core.linear_model import (LinearParams, TrainCfg, _loss_fn,
-                                     bag_logits, make_linear_tx,
-                                     validate_bag_features)
+                                     bag_logits, bag_logits_packed,
+                                     make_linear_tx, validate_bag_features)
 from repro.kernels import registry
 from repro.launch.mesh import data_axis_size
 from repro.pipeline import FeaturePipeline
@@ -63,13 +63,27 @@ Array = jax.Array
 __all__ = ["fit_linear_streamed", "streamed_accuracy"]
 
 
-def _make_update_step(cfg: TrainCfg, tx, n_micro: int):
+def _bag_logits_fn(pipe: FeaturePipeline):
+    """The logits head matching the pipeline's output format: the plain
+    index-gather ``bag_logits``, or — for ``spec.packed`` pipelines —
+    ``bag_logits_packed`` bound to the spec's (k, b), which unpacks the
+    uint32 feature words in registers and gathers the same table.  Packed
+    and unpacked training at the same (b_i, b_t) are bit-identical: the
+    decoded indices match, so every downstream float op matches."""
+    spec = pipe.spec
+    if not getattr(spec, "packed", False):
+        return bag_logits
+    return functools.partial(bag_logits_packed,
+                             num_hashes=spec.num_hashes, b=spec.bits)
+
+
+def _make_update_step(cfg: TrainCfg, tx, n_micro: int, logits_fn=bag_logits):
     """One donated jitted update on a featurized minibatch — the bag
     head riding the trainer's microbatch/donation machinery."""
     donate = registry.donate_argnums(0, 1)
 
     def loss_fn(p, inputs, labels):
-        return _loss_fn(p, inputs, labels, cfg, bag_logits), {}
+        return _loss_fn(p, inputs, labels, cfg, logits_fn), {}
 
     @functools.partial(jax.jit, donate_argnums=donate)
     def update(params, state, fb, yb, i):
@@ -98,9 +112,10 @@ def _make_sharded_update_step(cfg: TrainCfg, tx, n_micro: int,
     donated."""
     donate = (registry.donate_argnums(0, 1, 3) if featurize
               else registry.donate_argnums(0, 1))
+    logits_fn = _bag_logits_fn(pipe)
 
     def loss_fn(p, inputs, labels):
-        return _loss_fn(p, inputs, labels, cfg, bag_logits), {}
+        return _loss_fn(p, inputs, labels, cfg, logits_fn), {}
 
     def local_grads(params, pstate, xb, yb):
         fb = pipe._launch_with(xb, pstate) if featurize else xb
@@ -169,7 +184,7 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
     update is replicated.  ``batch_size`` must divide by the data-axis
     size (each device sees a fixed local batch shape)."""
     n = x.shape[0]
-    validate_bag_features(params, pipe.num_features)
+    validate_bag_features(params, pipe.num_features, spec=pipe.spec)
     bs = cfg.batch_size
     if bs <= 0:
         raise ValueError(
@@ -215,7 +230,8 @@ def fit_linear_streamed(params: LinearParams, pipe: FeaturePipeline,
         gather = _make_device_gather(bs, mesh)
 
     if mesh is None:
-        update = _make_update_step(cfg, tx, n_microbatches)
+        update = _make_update_step(cfg, tx, n_microbatches,
+                                   _bag_logits_fn(pipe))
     else:
         update = _make_sharded_update_step(cfg, tx, n_microbatches, pipe,
                                            mesh, featurize=shuffle)
@@ -275,8 +291,11 @@ def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
     """Accuracy over pipeline features without materializing (n, k):
     walks ``pipe.feature_chunks`` and accumulates correct counts.  With
     ``mesh=`` each chunk launch is shard_mapped over ``data`` (same
-    chunk walk, so the count — an integer — is identical)."""
-    validate_bag_features(params, pipe.num_features)
+    chunk walk, so the count — an integer — is identical).  Packed
+    pipelines evaluate through ``bag_logits_packed`` — the chunks stay
+    uint32 words end to end."""
+    validate_bag_features(params, pipe.num_features, spec=pipe.spec)
+    logits_fn = _bag_logits_fn(pipe)
     n = x.shape[0]
     if n == 0:
         return 0.0
@@ -285,7 +304,7 @@ def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
     # chunk's compute against the next chunk's dispatch
     correct = jnp.int32(0)
     for lo, hi, fb in pipe.feature_chunks(x, mesh=mesh):
-        pred = jnp.argmax(bag_logits(params, fb), axis=-1)
+        pred = jnp.argmax(logits_fn(params, fb), axis=-1)
         correct = correct + jnp.sum((pred == labels[lo:hi])
                                     .astype(jnp.int32))
     return int(correct) / n

@@ -12,7 +12,8 @@ times, so keep shapes small).
 Usage:
 
     # measure and persist (TPU: real Mosaic kernels)
-    python -m tools.autotune_blocks --ops cws,cws_rng,min_sum \
+    python -m tools.autotune_blocks \
+        --families cws,cws_rng,cws_packed,cws_rng_packed,min_sum \
         --shapes 1024x512x512 4096x1024x1024 \
         --out benchmarks/results/block_table.json
 
@@ -63,6 +64,15 @@ def _make_launcher(op: str, n: int, d: int, k: int):
         key = jax.random.PRNGKey(1)
         return lambda b: ops.cws_encode_rng(x, key, k, b_i=8, bn=b[0],
                                             bk=b[1], bd=b[2], impl=impl)
+    if op == "cws_packed":
+        params = make_cws_params(jax.random.PRNGKey(1), d, k)
+        return lambda b: ops.cws_encode_packed(x, params, b_i=8, bn=b[0],
+                                               bk=b[1], bd=b[2], impl=impl)
+    if op == "cws_rng_packed":
+        key = jax.random.PRNGKey(1)
+        return lambda b: ops.cws_encode_rng_packed(x, key, k, b_i=8,
+                                                   bn=b[0], bk=b[1],
+                                                   bd=b[2], impl=impl)
     if op == "min_sum":
         y = rand_nonneg(jax.random.PRNGKey(2), (k, d))
         return lambda b: ops.min_sum(x, y, bm=b[0], bn=b[1], bd=b[2],
@@ -112,8 +122,10 @@ def tune(op: str, n: int, d: int, k: int, *, repeats: int,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--ops", default="cws,cws_rng,min_sum",
-                    help="comma-separated op families to sweep")
+    ap.add_argument("--families", "--ops", dest="families",
+                    default="cws,cws_rng,cws_packed,cws_rng_packed,min_sum",
+                    help="comma-separated kernel families to sweep "
+                         "(--ops is the legacy spelling)")
     ap.add_argument("--shapes", nargs="*", default=None,
                     help="problem shapes as NxDxK (default: per-backend)")
     ap.add_argument("--repeats", type=int, default=3)
@@ -132,7 +144,7 @@ def main(argv=None) -> int:
           f"shapes={shapes}", flush=True)
 
     entries = {}
-    for op in args.ops.split(","):
+    for op in args.families.split(","):
         op = op.strip()
         for s in shapes:
             n, d, k = (int(v) for v in s.lower().split("x"))
