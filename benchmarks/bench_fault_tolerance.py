@@ -1,0 +1,173 @@
+"""Fault-tolerance cost model: what does preemption-grade training pay?
+
+Three numbers a production deployment of the streamed CWS trainer needs
+before turning on ``ckpt_every``:
+
+  * async-checkpoint overhead — wall time per step of the checkpointed
+    run vs the bare run.  The save path snapshots device arrays
+    synchronously but does all file IO on a background thread, so the
+    overhead should be a small fraction of the step, amortized over the
+    cadence.
+  * save / restore wall time — one full (params, opt_state, pipeline)
+    round trip through the commit protocol.
+  * resume gap — accuracy of kill-at-step-N + resume vs the
+    uninterrupted run.  The resume contract is BIT-identity, so the gap
+    is asserted to be exactly 0.00 pp (not "small").
+
+Writes benchmarks/results/BENCH_fault_tolerance.json; acceptance gates
+run AFTER the JSON is on disk so a failed gate still leaves the numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.checkpoint import Checkpointer, latest_step, restore_checkpoint
+from repro.core.linear_model import TrainCfg, init_bag
+from repro.data.synthetic import make_template_classification
+from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.runtime import ChaosKill, ChaosPlan, kill_at
+from repro.training import (fit_linear_streamed, resume_linear_streamed,
+                            streamed_accuracy)
+
+
+def _problem(fast: bool):
+    n_train = 640 if fast else 4096
+    ds = make_template_classification(3, n_train=n_train, n_test=400,
+                                      dim=64, n_classes=4, density=0.3)
+    spec = FeatureSpec(num_hashes=32, b_i=6)
+    pipe = FeaturePipeline.create(jax.random.PRNGKey(7), 64, spec)
+    steps = 60 if fast else 300
+    cfg = TrainCfg(n_classes=4, steps=steps, batch_size=64, lr=0.05)
+    p0 = init_bag(jax.random.PRNGKey(1), pipe.num_features, 4)
+    return ds, pipe, cfg, p0
+
+
+def _fit_wall(fit):
+    t0 = time.perf_counter()
+    params = fit()
+    jax.block_until_ready(params)
+    return params, time.perf_counter() - t0
+
+
+def run(fast: bool = False) -> dict:
+    ds, pipe, cfg, p0 = _problem(fast)
+    kw = dict(cfg=cfg)
+    ckpt_every = 10
+
+    # warm the JIT caches so the bare-vs-checkpointed comparison times
+    # steady-state steps, not compilation
+    fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, **kw)
+
+    bare, t_bare = _fit_wall(lambda: fit_linear_streamed(
+        p0, pipe, ds.x_train, ds.y_train, **kw))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt, t_ckpt = _fit_wall(lambda: fit_linear_streamed(
+            p0, pipe, ds.x_train, ds.y_train, ckpt=d,
+            ckpt_every=ckpt_every, **kw))
+    per_step_bare_us = t_bare / cfg.steps * 1e6
+    per_step_ckpt_us = t_ckpt / cfg.steps * 1e6
+    overhead_pct = (t_ckpt / t_bare - 1.0) * 100
+
+    # one synchronous save + restore round trip through the protocol
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        from repro.core.linear_model import make_linear_tx
+        tx = make_linear_tx(cfg)
+        state = tx.init(bare)
+        tree = {"params": bare, "opt_state": state,
+                "pipeline": pipe._state()}
+        t0 = time.perf_counter()
+        ck.save_async(1, tree)
+        ck.wait()
+        t_save = time.perf_counter() - t0
+        template = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+        t0 = time.perf_counter()
+        back = restore_checkpoint(ck.ckpt_dir, 1, template)
+        jax.block_until_ready(back)
+        t_restore = time.perf_counter() - t0
+        ckpt_bytes = sum(int(np.asarray(a).nbytes)
+                         for a in jax.tree_util.tree_leaves(tree))
+
+    # kill mid-run, resume, compare end-state accuracy: the gap is a
+    # CONTRACT (bit-identity), not a tolerance
+    acc_clean = streamed_accuracy(bare, pipe, ds.x_test, ds.y_test)
+    kill_step = cfg.steps // 2 + 3
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        try:
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, ckpt=ck,
+                                ckpt_every=ckpt_every,
+                                chaos=ChaosPlan(kill_at(kill_step)), **kw)
+            raise AssertionError("chaos kill did not fire")
+        except ChaosKill:
+            pass
+        try:
+            ck.wait()
+        except BaseException:
+            pass
+        resumed_from = latest_step(d)
+        t0 = time.perf_counter()
+        resumed = resume_linear_streamed(d, pipe, ds.x_train, ds.y_train,
+                                         **kw)
+        t_resume = time.perf_counter() - t0
+    acc_resumed = streamed_accuracy(resumed, pipe, ds.x_test, ds.y_test)
+    gap_pp = (acc_clean - acc_resumed) * 100
+    bit_identical = all(
+        bool(jnp.array_equal(a, b)) for a, b in
+        zip(jax.tree_util.tree_leaves(bare),
+            jax.tree_util.tree_leaves(resumed)))
+
+    out = {
+        "config": {"fast": fast, "steps": cfg.steps,
+                   "batch_size": cfg.batch_size,
+                   "ckpt_every": ckpt_every, "kill_step": kill_step,
+                   "n_train": int(ds.x_train.shape[0]),
+                   "num_features": int(pipe.num_features)},
+        "async_ckpt": {
+            "bare_us_per_step": per_step_bare_us,
+            "ckpt_us_per_step": per_step_ckpt_us,
+            "overhead_pct": overhead_pct,
+        },
+        "io": {"save_wall_s": t_save, "restore_wall_s": t_restore,
+               "checkpoint_bytes": ckpt_bytes},
+        "resume": {"resumed_from_step": resumed_from,
+                   "resume_wall_s": t_resume,
+                   "acc_clean": acc_clean, "acc_resumed": acc_resumed,
+                   "resume_gap_pp": gap_pp,
+                   "bit_identical_params": bit_identical},
+    }
+    emit("fault_tolerance/step_overhead", per_step_ckpt_us,
+         f"bare={per_step_bare_us:.0f}us overhead={overhead_pct:.1f}%")
+    emit("fault_tolerance/save", t_save * 1e6,
+         f"{ckpt_bytes/1e6:.2f}MB restore={t_restore*1e6:.0f}us")
+    emit("fault_tolerance/resume", t_resume * 1e6,
+         f"from_step={resumed_from} gap={gap_pp:.2f}pp")
+    save_json("BENCH_fault_tolerance", out)
+
+    # acceptance gates (checked AFTER the JSON is on disk)
+    assert bit_identical, "kill+resume params are not bit-identical"
+    assert gap_pp == 0.0, f"resume gap is {gap_pp:.2f} pp, must be 0.00"
+    print(f"OK: overhead {overhead_pct:.1f}%, save {t_save*1e3:.1f}ms, "
+          f"restore {t_restore*1e3:.1f}ms, resume gap {gap_pp:.2f} pp")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: smaller problem, fewer SGD steps")
+    args = ap.parse_args(argv)
+    run(fast=args.fast)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

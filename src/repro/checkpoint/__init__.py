@@ -1,6 +1,7 @@
 from repro.checkpoint.checkpointer import (
     Checkpointer, save_checkpoint, restore_checkpoint, latest_step,
+    committed_steps, gc_incomplete,
 )
 
 __all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "latest_step", "committed_steps", "gc_incomplete"]

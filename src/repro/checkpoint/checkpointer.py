@@ -20,6 +20,22 @@ Design points for 1000+ nodes:
     `latest_step` only returns committed steps; old steps are GC'd with
     `keep` retention.
 
+Commit protocol (crash-safe at EVERY interleaving — exercised by the
+chaos harness, repro.runtime.chaos):
+
+    write shards + manifest into step_XXXXXXXX.tmp
+    rename step_XXXXXXXX.tmp -> step_XXXXXXXX          (atomic on POSIX)
+    write step_XXXXXXXX/COMMIT                          (the commit point)
+
+A crash before the rename leaves a ``.tmp`` dir; a crash between rename
+and COMMIT leaves an uncommitted step dir.  Both are invisible to
+``latest_step``/retention (which parse ONLY committed ``step_NNNNNNNN``
+names) and are swept by ``gc_incomplete`` on the next startup.  COMMIT
+is deliberately written AFTER the rename: writing it inside the tmp dir
+would make a crash between the COMMIT write and the rename leave a
+``step_*.tmp`` dir that looks committed and crashes every later
+``latest_step`` on ``int("XXXXXXXX.tmp")``.
+
 On this single-process container all shards are local, but the format and
 code paths are multi-process (indexed by jax.process_index()).
 """
@@ -45,15 +61,50 @@ def _tree_paths(tree) -> list[str]:
     return ["/".join(str(k) for k in path) for path, _ in flat]
 
 
-def latest_step(ckpt_dir) -> Optional[int]:
+def _step_of(p: pathlib.Path) -> Optional[int]:
+    """``step_NNNNNNNN`` -> N; None for anything else — in particular the
+    ``step_*.tmp`` in-progress write dirs a crash can leave behind (their
+    names start with ``step_`` but must never parse as steps)."""
+    if not p.name.startswith("step_") or p.name.endswith(".tmp"):
+        return None
+    try:
+        return int(p.name.split("_")[1])
+    except ValueError:
+        return None
+
+
+def committed_steps(ckpt_dir) -> list[int]:
+    """All committed step numbers, ascending (crash leftovers excluded)."""
     d = pathlib.Path(ckpt_dir)
     if not d.exists():
-        return None
-    steps = []
-    for p in d.iterdir():
-        if p.name.startswith("step_") and (p / "COMMIT").exists():
-            steps.append(int(p.name.split("_")[1]))
-    return max(steps) if steps else None
+        return []
+    return sorted(s for p in d.iterdir()
+                  if (s := _step_of(p)) is not None
+                  and (p / "COMMIT").exists())
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def gc_incomplete(ckpt_dir) -> list[str]:
+    """Sweep crash leftovers: ``step_*.tmp`` write dirs (died before the
+    rename) and uncommitted ``step_*`` dirs (died between rename and
+    COMMIT).  Returns the removed names.  Called by ``Checkpointer`` at
+    construction — i.e. at (re)start, before any writer thread exists, so
+    nothing live can be swept."""
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return []
+    removed = []
+    for p in list(d.iterdir()):
+        if not p.is_dir() or not p.name.startswith("step_"):
+            continue
+        if p.name.endswith(".tmp") or not (p / "COMMIT").exists():
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p.name)
+    return sorted(removed)
 
 
 def _extract_shards(step: int, tree: PyTree, extra: Optional[dict]):
@@ -90,7 +141,13 @@ def _extract_shards(step: int, tree: PyTree, extra: Optional[dict]):
 
 
 def _write_shards(ckpt_dir, step: int, manifest: dict, shards: dict,
-                  keep: int) -> None:
+                  keep: int, chaos=None) -> None:
+    """Write one checkpoint under the commit protocol (module docstring).
+    ``chaos`` (a repro.runtime.chaos.ChaosPlan) gets a fire() call at the
+    named fault-injection sites so the harness can kill/fail the write at
+    every crash window."""
+    if chaos is not None:
+        chaos.fire("ckpt_io", step)
     d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
     tmp = d.with_suffix(".tmp")
     proc = jax.process_index()
@@ -112,22 +169,27 @@ def _write_shards(ckpt_dir, step: int, manifest: dict, shards: dict,
     (tmp / f"index_p{proc}.json").write_text(json.dumps(index))
     if proc == 0:
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-        (tmp / "COMMIT").write_text(str(time.time()))
+        if chaos is not None:
+            chaos.fire("ckpt_pre_rename", step)     # .tmp dir, fully written
         shutil.rmtree(d, ignore_errors=True)
         tmp.rename(d)
+        if chaos is not None:
+            chaos.fire("ckpt_pre_commit", step)     # renamed, no COMMIT yet
+        (d / "COMMIT").write_text(str(time.time()))
         parent = pathlib.Path(ckpt_dir)
-        steps = sorted(p for p in parent.iterdir()
-                       if p.name.startswith("step_") and
+        steps = sorted((s, p) for p in parent.iterdir()
+                       if (s := _step_of(p)) is not None and
                        (p / "COMMIT").exists())
-        for old in steps[:-keep]:
+        for _, old in steps[:-keep]:
             shutil.rmtree(old, ignore_errors=True)
 
 
 def save_checkpoint(ckpt_dir, step: int, tree: PyTree, *,
-                    extra: Optional[dict] = None, keep: int = 3) -> None:
+                    extra: Optional[dict] = None, keep: int = 3,
+                    chaos=None) -> None:
     """Synchronous sharded save of `tree` (arrays may be sharded)."""
     manifest, shards = _extract_shards(step, tree, extra)
-    _write_shards(ckpt_dir, step, manifest, shards, keep)
+    _write_shards(ckpt_dir, step, manifest, shards, keep, chaos=chaos)
 
 
 def restore_checkpoint(ckpt_dir, step: int, template: PyTree, *,
@@ -215,15 +277,29 @@ def restore_checkpoint(ckpt_dir, step: int, template: PyTree, *,
 
 
 class Checkpointer:
-    """Async wrapper: snapshot-to-host then background write."""
+    """Async wrapper: snapshot-to-host then background write.
 
-    def __init__(self, ckpt_dir, keep: int = 3):
+    Construction sweeps crash leftovers (``gc_incomplete``) — a restarted
+    job starts from a directory holding only committed steps.  An error
+    on the background write thread is surfaced (raised) on the NEXT
+    ``save_async``/``wait`` call, never swallowed.  ``chaos`` threads a
+    fault plan into every write (see repro.runtime.chaos).
+    """
+
+    def __init__(self, ckpt_dir, keep: int = 3, *, chaos=None,
+                 gc_on_init: bool = True):
         self.ckpt_dir = pathlib.Path(ckpt_dir)
         self.keep = keep
+        self.chaos = chaos
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        if gc_on_init and jax.process_index() == 0:
+            gc_incomplete(self.ckpt_dir)
 
     def wait(self):
+        """Join the in-flight write; raise if it (or the previous one)
+        failed.  A failed step was never committed, so after the raise the
+        directory still ends at the last good step."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -242,7 +318,7 @@ class Checkpointer:
         def work():
             try:
                 _write_shards(self.ckpt_dir, step, manifest, shards,
-                              self.keep)
+                              self.keep, chaos=self.chaos)
             except BaseException as e:   # surfaced on next wait()
                 self._error = e
 

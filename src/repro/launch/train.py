@@ -94,6 +94,13 @@ def main():
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--backoff-s", type=float, default=0.5,
+                    help="base restart backoff (doubles per restart)")
+    ap.add_argument("--hard-timeout-s", type=float, default=0.0,
+                    help="abort a step hung longer than this (0 = off); "
+                    "the watchdog fires mid-step, and the run restarts "
+                    "from the last committed checkpoint")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, args.variant)
@@ -120,7 +127,21 @@ def main():
         if ck is not None and step % args.ckpt_every == 0:
             ck.save_async(step, state, extra={"loader": loader.snapshot()})
 
-    trainer = RetryingTrainer(build)
+    def on_restart(event):
+        # the structured restart log, one line per event, greppable
+        print(f"restart {event['restart']}: {event['error']} at step "
+              f"{event['step']} — {event['message']!r}; backing off "
+              f"{event['backoff_s']:.1f}s"
+              + (" (GIVING UP)" if event["gave_up"] else ""), flush=True)
+
+    wd_factory = None
+    if args.hard_timeout_s > 0:
+        from repro.runtime import StepWatchdog
+        wd_factory = lambda: StepWatchdog(hard_timeout_s=args.hard_timeout_s)
+    trainer = RetryingTrainer(build, max_restarts=args.max_restarts,
+                              backoff_s=args.backoff_s,
+                              on_restart=on_restart,
+                              watchdog_factory=wd_factory)
     with mesh:
         state = trainer.run(args.steps, hooks=[hook])
     if ck is not None:

@@ -34,6 +34,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.cws import (CWSParams, make_cws_params, cws_hash_reference,
                             cws_hash_regen)
@@ -169,6 +170,27 @@ class FeaturePipeline:
     @property
     def num_features(self) -> int:
         return self.spec.num_features
+
+    def fingerprint(self) -> dict:
+        """Identity of the feature space AND the exact random parameters
+        behind it, as a JSON-able dict: the FeatureSpec fields, the input
+        dim, the mode, and a content digest (crc32) of the launch state —
+        the two key words in param-free mode, the (sliced) CWS matrices
+        otherwise.  The streamed trainer stamps this into every
+        checkpoint so a resume against a DIFFERENT pipeline (other key,
+        other spec, other dim) fails loudly instead of silently training
+        on garbage indices."""
+        import zlib
+        if self.param_free:
+            data = np.asarray(self._key_words).tobytes()
+        else:
+            s = self._state()
+            data = b"".join(np.asarray(a).tobytes()
+                            for a in (s.r, s.log_c, s.beta))
+        return {"spec": dataclasses.asdict(self.spec),
+                "dim": int(self.dim),
+                "param_free": bool(self.param_free),
+                "digest": f"{zlib.crc32(data) & 0xFFFFFFFF:08x}"}
 
     # -- single-launch building block ----------------------------------
 

@@ -1,5 +1,14 @@
 from repro.runtime.fault_tolerance import (
     StepWatchdog, RetryingTrainer, TrainingAborted,
 )
+from repro.runtime.chaos import (
+    ChaosKill, ChaosPlan, Fault, FaultInjected, fail_async_write, hang_at,
+    kill_at, kill_between_snapshot_and_commit, kill_eval_at, raise_at,
+)
 
-__all__ = ["StepWatchdog", "RetryingTrainer", "TrainingAborted"]
+__all__ = [
+    "StepWatchdog", "RetryingTrainer", "TrainingAborted",
+    "ChaosKill", "ChaosPlan", "Fault", "FaultInjected",
+    "fail_async_write", "hang_at", "kill_at",
+    "kill_between_snapshot_and_commit", "kill_eval_at", "raise_at",
+]

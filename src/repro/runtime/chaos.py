@@ -1,0 +1,153 @@
+"""Deterministic fault injection for preemption-grade training.
+
+Long-running streamed SGD jobs die in only a handful of ways: a step
+raises (bad host, OOM), a step hangs (deadlocked collective), an async
+checkpoint write fails (filesystem), or the process is killed at an
+arbitrary point — including inside the checkpoint commit window.  This
+module turns each of those into a DETERMINISTIC, replayable fault plan
+that the training/checkpoint paths execute at named injection sites, so
+the chaos tests (tests/test_chaos.py) can kill a run at an exact step,
+resume it, and assert bit-identity against the uninterrupted run.
+
+Injection sites (where the production code calls ``plan.fire(site, i)``):
+
+    "step"             fit_linear_streamed, before update step i
+    "eval_chunk"       streamed_accuracy, before chunk i
+    "ckpt_io"          Checkpointer write, before any file IO
+    "ckpt_pre_rename"  write dir fully written, BEFORE tmp -> step rename
+    "ckpt_pre_commit"  renamed, BEFORE the COMMIT marker is written
+
+Fault actions:
+
+  * ``raise``  — an in-process software fault (an ``Exception``):
+    restartable by RetryingTrainer without losing the process.
+  * ``kill``   — simulated preemption.  Raises ``ChaosKill``, which
+    derives from ``BaseException`` precisely so no retry loop can catch
+    it: the "process" is gone, exactly like SIGKILL.  Tests catch it at
+    top level and start a fresh run, as a cluster scheduler would.
+  * ``hang``   — the step blocks for ``seconds`` (a deadlocked
+    collective / stuck host); what the StepWatchdog's background arm
+    must detect mid-step.
+  * ``io_error`` — the checkpoint write raises ``OSError`` (surfaced by
+    the Checkpointer on the next save_async/wait).
+
+Every firing is recorded in ``plan.fired`` (a structured log), so tests
+can assert not just outcomes but the exact fault timeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+class ChaosKill(BaseException):
+    """Simulated process death (preemption / SIGKILL).
+
+    Deliberately NOT an ``Exception``: in-process retry loops
+    (RetryingTrainer) must not be able to "survive" it — survival means
+    a NEW process resuming from the last committed checkpoint.
+    """
+
+
+class FaultInjected(RuntimeError):
+    """The default in-process software fault raised by ``raise`` faults."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One deterministic fault: fire ``action`` when the counter of
+    ``site`` reaches ``index``.  ``once=True`` (default) disarms after
+    the first firing so a resumed run replaying the same step does not
+    re-die."""
+    site: str
+    index: int
+    action: str                 # "raise" | "kill" | "hang" | "io_error"
+    seconds: float = 0.0        # hang duration
+    once: bool = True
+
+
+def raise_at(step: int) -> Fault:
+    """Software fault in update step ``step`` (in-process restartable)."""
+    return Fault("step", step, "raise")
+
+
+def kill_at(step: int) -> Fault:
+    """Preemption right before update step ``step`` runs."""
+    return Fault("step", step, "kill")
+
+
+def hang_at(step: int, seconds: float) -> Fault:
+    """Step ``step`` hangs for ``seconds`` (deadlocked-collective model:
+    the step neither finishes nor raises until the hang elapses)."""
+    return Fault("step", step, "hang", seconds=seconds)
+
+
+def kill_eval_at(chunk: int) -> Fault:
+    """Preemption before eval chunk ``chunk`` of streamed_accuracy."""
+    return Fault("eval_chunk", chunk, "kill")
+
+
+def fail_async_write(step: int) -> Fault:
+    """The async checkpoint write for ``step`` raises OSError."""
+    return Fault("ckpt_io", step, "io_error")
+
+
+def kill_between_snapshot_and_commit(step: int,
+                                     phase: str = "pre_commit") -> Fault:
+    """Kill the writer inside the commit window of checkpoint ``step``:
+    ``phase="pre_rename"`` leaves a fully-written ``step_*.tmp`` dir,
+    ``phase="pre_commit"`` leaves a renamed dir missing COMMIT.  Either
+    way the checkpoint must stay invisible to ``latest_step``."""
+    if phase not in ("pre_rename", "pre_commit"):
+        raise ValueError(f"phase must be pre_rename|pre_commit; got {phase}")
+    return Fault(f"ckpt_{phase}", step, "kill")
+
+
+class ChaosPlan:
+    """A set of deterministic faults + the structured log of firings.
+
+    The plan is shared by reference between the trainer and the
+    Checkpointer (whose writes run on a background thread); ``fired``
+    appends are GIL-atomic list ops, and each once-fault is disarmed
+    BEFORE its action runs so a fault can never double-fire across the
+    kill/resume boundary of a single in-process test.
+    """
+
+    def __init__(self, *faults: Fault):
+        self.faults = list(faults)
+        self.fired: list[dict] = []
+        self._spent: set[int] = set()   # ids into self.faults
+
+    def fire(self, site: str, index: int) -> None:
+        """Called by the instrumented production paths; a no-op unless a
+        fault matches (site, index)."""
+        for fid, f in enumerate(self.faults):
+            if f.site != site or f.index != index:
+                continue
+            if fid in self._spent:
+                continue
+            if f.once:
+                self._spent.add(fid)
+            self.fired.append({"site": site, "index": index,
+                               "action": f.action, "t": time.time(),
+                               "seconds": f.seconds})
+            if f.action == "hang":
+                time.sleep(f.seconds)
+            elif f.action == "raise":
+                raise FaultInjected(f"chaos: injected fault at "
+                                    f"{site}:{index}")
+            elif f.action == "kill":
+                raise ChaosKill(f"chaos: simulated preemption at "
+                                f"{site}:{index}")
+            elif f.action == "io_error":
+                raise OSError(f"chaos: injected write failure at "
+                              f"{site}:{index}")
+            else:
+                raise ValueError(f"unknown chaos action {f.action!r}")
+
+    def log(self, site: Optional[str] = None) -> list[dict]:
+        """The firing timeline, optionally filtered to one site."""
+        if site is None:
+            return list(self.fired)
+        return [e for e in self.fired if e["site"] == site]

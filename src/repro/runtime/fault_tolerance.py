@@ -4,15 +4,23 @@ At 1000+ nodes, failures are routine: a training job must (a) notice a
 stuck/slow step, (b) abort cleanly, (c) restart from the last committed
 checkpoint, possibly on FEWER nodes (elastic). The pieces here:
 
-  * ``StepWatchdog`` — monitors per-step wall time on a background thread.
-    A step exceeding ``timeout_factor`` x the trailing-median is flagged as
-    a straggler event; ``max_strays`` consecutive events trigger an abort
-    (in production: the signal that makes the scheduler replace the slow
-    host; here: raises in the driver loop).
-  * ``RetryingTrainer`` — wraps the step loop: on any exception it
-    restores the latest committed checkpoint (via the elastic
-    Checkpointer, so a changed mesh is fine), rebuilds the jitted step,
-    and resumes; gives up after ``max_restarts``.
+  * ``StepWatchdog`` — two detection tiers.  Statistical: a completed
+    step exceeding ``timeout_factor`` x the trailing-median is flagged as
+    a straggler event; ``max_strays`` consecutive events abort.  Hard: a
+    background monitor thread watches the step IN FLIGHT and fires the
+    moment ``hard_timeout_s`` elapses without ``end_step()`` — the only
+    tier that can catch a genuinely hung step (deadlocked collective),
+    which by definition never reaches ``end_step``.  Firing records a
+    structured event and, by default, interrupts the main thread
+    (SIGINT), which the driver loop converts to ``TrainingAborted``.
+  * ``RetryingTrainer`` — the restart driver: on a restartable failure
+    it logs a structured restart event, sleeps an exponential backoff,
+    and rebuilds from the latest committed checkpoint (via the elastic
+    Checkpointer, so a changed mesh is fine); gives up after
+    ``max_restarts``.  ``TrainingAborted`` (the straggler/hang signal)
+    IS restartable — aborting a stuck step exists precisely so the job
+    can restart, not die.  ``repro.runtime.chaos.ChaosKill`` is not: it
+    models SIGKILL, which no in-process loop survives.
 
 The data loader's state is part of the checkpoint ``extra`` payload, so a
 restart replays no batch and skips none (deterministic loaders,
@@ -20,6 +28,8 @@ repro.data.loader).
 """
 from __future__ import annotations
 
+import os
+import signal
 import statistics
 import threading
 import time
@@ -32,30 +42,140 @@ class TrainingAborted(RuntimeError):
     pass
 
 
+def _interrupt_main_thread():
+    """Deliver SIGINT to the process (-> KeyboardInterrupt in the main
+    thread, interrupting even a blocking sleep/collective wait).  The
+    portable fallback flags the interpreter loop instead."""
+    try:
+        os.kill(os.getpid(), signal.SIGINT)
+    except (AttributeError, OSError):        # non-POSIX fallback
+        import _thread
+        _thread.interrupt_main()
+
+
 class StepWatchdog:
-    """Detects stuck/straggling steps by wall-time statistics."""
+    """Detects stuck/straggling steps by wall-time statistics AND a
+    background hard-timeout monitor that fires mid-step.
+
+    Usage (the streamed trainer wires this up when given ``watchdog=``)::
+
+        wd = StepWatchdog(hard_timeout_s=30.0)
+        try:
+            for batch in loader:
+                wd.start_step()
+                step(batch)          # a hang here IS detected: the
+                wd.end_step()        # monitor fires without end_step
+        finally:
+            wd.stop()
+
+    When the monitor fires it appends a ``kind="hard_timeout"`` event,
+    sets ``fired``, and calls ``on_timeout(elapsed)`` if given — else
+    interrupts the main thread with SIGINT; the driver catches the
+    resulting KeyboardInterrupt and re-raises it as ``TrainingAborted``
+    via ``reraise_if_fired()``.
+    """
 
     def __init__(self, *, timeout_factor: float = 5.0,
                  min_history: int = 5, max_strays: int = 3,
                  hard_timeout_s: float = 0.0,
-                 on_straggler: Optional[Callable[[float, float], None]] = None):
+                 poll_s: Optional[float] = None,
+                 on_straggler: Optional[Callable[[float, float], None]] = None,
+                 on_timeout: Optional[Callable[[float], None]] = None):
         self.timeout_factor = timeout_factor
         self.min_history = min_history
         self.max_strays = max_strays
         self.hard_timeout_s = hard_timeout_s
+        self.poll_s = poll_s or max(min(hard_timeout_s / 20.0, 0.25), 0.005)
         self.on_straggler = on_straggler
+        self.on_timeout = on_timeout
         self.history: list[float] = []
         self.stray_count = 0
         self.events: list[dict] = []
+        self.step_index = -1
+        self.fired: Optional[dict] = None     # last hard-timeout event
         self._t0: Optional[float] = None
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._monitor: Optional[threading.Thread] = None
+        self._fired_step: Optional[int] = None
 
-    def start_step(self):
-        self._t0 = time.monotonic()
+    # -- background arm ------------------------------------------------
+
+    def _monitor_loop(self):
+        while not self._stop.wait(self.poll_s):
+            with self._lock:
+                t0, step = self._t0, self.step_index
+                already = self._fired_step == step
+            if t0 is None or already:
+                continue
+            elapsed = time.monotonic() - t0
+            if elapsed <= self.hard_timeout_s:
+                continue
+            event = {"t": time.time(), "kind": "hard_timeout",
+                     "step": step, "elapsed_s": elapsed,
+                     "hard_timeout_s": self.hard_timeout_s}
+            with self._lock:
+                if self._fired_step == step:   # raced with another poll
+                    continue
+                self._fired_step = step
+                self.fired = event
+                self.events.append(event)
+            if self.on_timeout is not None:
+                self.on_timeout(elapsed)
+            else:
+                _interrupt_main_thread()
+
+    def start(self):
+        """Arm the background monitor (no-op without ``hard_timeout_s``)."""
+        if self.hard_timeout_s <= 0 or self._monitor is not None:
+            return
+        self._stop.clear()
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         daemon=True)
+        self._monitor.start()
+
+    def stop(self):
+        """Disarm the monitor (idempotent; always call from a finally)."""
+        self._stop.set()
+        if self._monitor is not None:
+            self._monitor.join()
+            self._monitor = None
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False
+
+    def reraise_if_fired(self, exc: BaseException) -> None:
+        """Convert the monitor's interrupt into the abort signal: if the
+        hard timeout fired for the in-flight step, raise TrainingAborted
+        (chaining ``exc``); otherwise return so the caller re-raises
+        ``exc`` (e.g. a REAL Ctrl-C must stay a KeyboardInterrupt)."""
+        if self.fired is not None and self._fired_step == self.step_index:
+            raise TrainingAborted(
+                f"hung step {self.fired['step']}: no end_step after "
+                f"{self.fired['elapsed_s']:.2f}s "
+                f"(hard_timeout_s={self.hard_timeout_s})") from exc
+
+    # -- per-step accounting -------------------------------------------
+
+    def start_step(self, index: Optional[int] = None):
+        """``index`` (optional) pins the step number recorded in events —
+        pass the GLOBAL step so a resumed run's timeline reads right."""
+        self.start()
+        with self._lock:
+            self.step_index = self.step_index + 1 if index is None else index
+            self._t0 = time.monotonic()
 
     def end_step(self):
         assert self._t0 is not None
-        dt = time.monotonic() - self._t0
-        self._t0 = None
+        with self._lock:
+            dt = time.monotonic() - self._t0
+            self._t0 = None
+            hard_fired = self._fired_step == self.step_index
         median = (statistics.median(self.history)
                   if len(self.history) >= self.min_history else None)
         is_stray = False
@@ -63,9 +183,17 @@ class StepWatchdog:
             is_stray = True
         if self.hard_timeout_s and dt > self.hard_timeout_s:
             is_stray = True
+        if hard_fired:
+            # the monitor already flagged this step mid-flight; a step
+            # that finally limps home past the hard timeout still aborts
+            raise TrainingAborted(
+                f"step {self.step_index} exceeded hard timeout "
+                f"({dt:.2f}s > {self.hard_timeout_s}s; detected mid-step "
+                f"by the watchdog monitor)")
         if is_stray:
             self.stray_count += 1
-            self.events.append({"t": time.time(), "step_s": dt,
+            self.events.append({"t": time.time(), "kind": "straggler",
+                                "step": self.step_index, "step_s": dt,
                                 "median_s": median})
             if self.on_straggler:
                 self.on_straggler(dt, median or 0.0)
@@ -84,36 +212,97 @@ class StepWatchdog:
 class RetryingTrainer:
     """Restart-from-checkpoint driver loop.
 
-    build_fn() -> (state, loader, step_fn): must restore from the latest
-    checkpoint internally (see examples/train_lm.py / launch/train.py).
+    Restart policy (shared by ``run`` and ``call``): any ``Exception`` —
+    including ``TrainingAborted``, the watchdog's abort signal — triggers
+    a restart with exponential backoff (``backoff_s * backoff_factor **
+    (restarts-1)``, capped at ``max_backoff_s``) until ``max_restarts``
+    is exhausted, then the failure re-raises.  Every restart appends a
+    structured event to ``restart_log`` (and calls ``on_restart``), so
+    callers can see exactly what died, when, and how long the job backed
+    off.  ``ChaosKill`` (simulated SIGKILL) is a ``BaseException`` and
+    passes straight through — surviving it means a NEW process resuming
+    from the checkpoint, not this loop.
+
+    Two entry points:
+      * ``run(n_steps)`` — the LM driver loop: ``build_fn() -> (state,
+        loader, step_fn, start_step)`` must restore from the latest
+        checkpoint internally (see launch/train.py).
+      * ``call(fn)`` — generic: call ``fn()`` until it returns; ``fn``
+        must be restartable (resume from durable state) when re-invoked.
+        Used by ``fit_linear_streamed_resilient``.
     """
 
-    def __init__(self, build_fn, *, max_restarts: int = 3):
+    def __init__(self, build_fn=None, *, max_restarts: int = 3,
+                 backoff_s: float = 0.5, backoff_factor: float = 2.0,
+                 max_backoff_s: float = 30.0,
+                 on_restart: Optional[Callable[[dict], None]] = None,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 watchdog_factory: Optional[Callable[[], StepWatchdog]] = None):
         self.build_fn = build_fn
         self.max_restarts = max_restarts
+        self.backoff_s = backoff_s
+        self.backoff_factor = backoff_factor
+        self.max_backoff_s = max_backoff_s
+        self.on_restart = on_restart
+        self.sleep_fn = sleep_fn
+        self.watchdog_factory = watchdog_factory or StepWatchdog
         self.restarts = 0
+        self.restart_log: list[dict] = []
+
+    def _backoff(self) -> float:
+        return min(self.backoff_s * self.backoff_factor ** (self.restarts - 1),
+                   self.max_backoff_s)
+
+    def _note_failure(self, exc: Exception, step: Optional[int]) -> None:
+        """Log the failure; sleep the backoff; or re-raise if out of
+        restarts.  Returning means: retry."""
+        self.restarts += 1
+        out_of_restarts = self.restarts > self.max_restarts
+        backoff = 0.0 if out_of_restarts else self._backoff()
+        event = {"restart": self.restarts, "step": step,
+                 "error": type(exc).__name__, "message": str(exc),
+                 "t": time.time(), "backoff_s": backoff,
+                 "gave_up": out_of_restarts}
+        self.restart_log.append(event)
+        if self.on_restart:
+            self.on_restart(event)
+        if out_of_restarts:
+            raise exc
+        if backoff > 0:
+            self.sleep_fn(backoff)
+
+    def call(self, fn: Callable[[], object]):
+        """Generic restart driver around a restartable callable."""
+        while True:
+            try:
+                return fn()
+            except Exception as e:      # ChaosKill is BaseException: falls
+                self._note_failure(e, step=None)      # through, as SIGKILL
 
     def run(self, n_steps: int, *, hooks=()):
         while True:
+            step = None
+            watchdog = self.watchdog_factory()
             try:
                 state, loader, step_fn, start_step = self.build_fn()
-                watchdog = StepWatchdog()
                 step = start_step
                 while step < n_steps:
                     batch = next(loader)
                     watchdog.start_step()
-                    state, metrics = step_fn(state, batch)
-                    jax.block_until_ready(metrics["loss"])
+                    try:
+                        state, metrics = step_fn(state, batch)
+                        jax.block_until_ready(metrics["loss"])
+                    except KeyboardInterrupt as e:
+                        watchdog.reraise_if_fired(e)
+                        raise
                     watchdog.end_step()
                     step += 1
                     for h in hooks:
                         h(step, state, metrics, loader)
                 return state
-            except TrainingAborted:
-                raise
-            except Exception:
-                self.restarts += 1
-                if self.restarts > self.max_restarts:
-                    raise
-                # fall through: rebuild from latest checkpoint
-                continue
+            except Exception as e:
+                # fall through: rebuild from latest checkpoint (the
+                # build_fn restores it), after logging + backoff
+                self._note_failure(e, step=step)
+            finally:
+                watchdog.stop()

@@ -4,12 +4,16 @@ from repro.training.trainer import (
     microbatch_grads,
 )
 from repro.training.linear_trainer import (
-    fit_linear_streamed, streamed_accuracy,
+    fit_linear_streamed, resume_linear_streamed,
+    fit_linear_streamed_resilient, streamed_accuracy,
+    resume_streamed_accuracy,
 )
 
 __all__ = [
     "TrainState", "make_train_step", "make_serve_steps", "init_train_state",
     "param_pspecs", "cache_pspecs", "input_specs", "state_pspecs",
     "TrainHparams", "microbatch_grads",
-    "fit_linear_streamed", "streamed_accuracy",
+    "fit_linear_streamed", "resume_linear_streamed",
+    "fit_linear_streamed_resilient", "streamed_accuracy",
+    "resume_streamed_accuracy",
 ]

@@ -1,0 +1,523 @@
+"""Chaos tests: kill a streamed training run at an exact point, resume
+it, and demand BIT-IDENTITY with the uninterrupted run.
+
+The fault model (repro.runtime.chaos) covers the ways long jobs die:
+a step raises, a step hangs (the watchdog's background arm must catch it
+MID-step — a hung step never reaches end_step), an async checkpoint
+write fails, the process is killed at an arbitrary step, or killed
+inside the checkpoint commit window (between snapshot and COMMIT).
+``ChaosKill`` derives from BaseException so no in-process retry loop can
+"survive" it — surviving preemption means a NEW call resuming from the
+last committed step, which is exactly what these tests do.
+
+The elastic tests run under the forced-8-host-device CI config
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``): a run
+checkpointed on an 8-device mesh resumes on 4 devices and 1 device with
+equal final accuracy, and on 8 devices bit-identically.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (Checkpointer, committed_steps, gc_incomplete,
+                              latest_step, save_checkpoint)
+from repro.core.linear_model import TrainCfg, init_bag
+from repro.data.synthetic import make_template_classification
+from repro.launch.mesh import make_data_mesh
+from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.runtime import (ChaosKill, ChaosPlan, FaultInjected,
+                           RetryingTrainer, StepWatchdog, TrainingAborted,
+                           fail_async_write, hang_at, kill_at,
+                           kill_between_snapshot_and_commit, kill_eval_at,
+                           raise_at)
+from repro.training import (fit_linear_streamed, fit_linear_streamed_resilient,
+                            resume_linear_streamed, resume_streamed_accuracy,
+                            streamed_accuracy)
+
+NDEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    NDEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+    "device_count=8 (the chaos-smoke CI config)")
+
+
+def tree_eq(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def drain(ck):
+    """Join the async writer after an in-process simulated kill.  A real
+    SIGKILL has no in-flight thread to race with the restarted process;
+    these tests do, so the writer is drained before reading the dir
+    (writer-thread faults were the point — swallow them here)."""
+    try:
+        ck.wait()
+    except BaseException:
+        pass
+
+
+@pytest.fixture(scope="module")
+def problem():
+    ds = make_template_classification(3, n_train=160, n_test=80, dim=32,
+                                      n_classes=3, mult_noise=1.1,
+                                      spike_prob=0.02, density=0.3)
+    spec = FeatureSpec(num_hashes=24, b_i=4)
+    # row_chunk=32 -> the 80-row eval walks 3 chunks (kill targets exist)
+    pipe = FeaturePipeline.create(jax.random.PRNGKey(7), 32, spec,
+                                  row_chunk=32)
+    cfg = TrainCfg(n_classes=3, steps=40, batch_size=32, lr=0.05)
+    p0 = init_bag(jax.random.PRNGKey(1), pipe.num_features, 3)
+    return ds, pipe, cfg, p0
+
+
+@pytest.fixture(scope="module")
+def clean_run(problem):
+    """The uninterrupted reference: (params, opt_state) with no faults,
+    no checkpointing — what every kill/resume result must reproduce."""
+    ds, pipe, cfg, p0 = problem
+    return fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                               return_state=True)
+
+
+class TestKillResume:
+    def test_kill_mid_epoch_resume_bit_identical(self, problem, clean_run,
+                                                 tmp_path):
+        """SIGKILL at step 17 (mid-epoch: steps_per_epoch=5), resume from
+        the last committed step (15): final params AND optimizer state
+        match the uninterrupted run bit for bit — no batch replayed, none
+        skipped, Adam moments included."""
+        ds, pipe, cfg, p0 = problem
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=ck, ckpt_every=5,
+                                chaos=ChaosPlan(kill_at(17)))
+        drain(ck)
+        assert latest_step(tmp_path) == 15
+        params, state = resume_linear_streamed(
+            tmp_path, pipe, ds.x_train, ds.y_train, cfg=cfg,
+            return_state=True)
+        tree_eq(clean_run[0], params)
+        tree_eq(clean_run[1], state)
+
+    def test_resume_mid_epoch_checkpoint(self, problem, clean_run,
+                                         tmp_path):
+        """A checkpoint cadence that lands MID-epoch (every 3 steps with
+        5 steps/epoch) still resumes exactly: the resumed loop re-derives
+        the current epoch's permutation from fold_in(key, epoch)."""
+        ds, pipe, cfg, p0 = problem
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=ck, ckpt_every=3,
+                                chaos=ChaosPlan(kill_at(8)))
+        drain(ck)
+        assert latest_step(tmp_path) == 6     # epoch 1, pos 1: mid-epoch
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg)
+        tree_eq(clean_run[0], params)
+
+    def test_resumed_run_keeps_checkpointing(self, problem, tmp_path):
+        ds, pipe, cfg, p0 = problem
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=ck, ckpt_every=5,
+                                chaos=ChaosPlan(kill_at(17)))
+        drain(ck)
+        resume_linear_streamed(tmp_path, pipe, ds.x_train, ds.y_train,
+                               cfg=cfg, ckpt_every=5)
+        # the resumed leg committed through the end of the run
+        assert latest_step(tmp_path) == cfg.steps
+
+    def test_mismatch_guards(self, problem, tmp_path):
+        """Resuming against the wrong pipeline/config/dataset/key must
+        fail LOUDLY, not silently continue a different run."""
+        ds, pipe, cfg, p0 = problem
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=ck, ckpt_every=5,
+                                chaos=ChaosPlan(kill_at(17)))
+        drain(ck)
+        other_pipe = FeaturePipeline.create(
+            jax.random.PRNGKey(99), 32, pipe.spec, row_chunk=32)
+        with pytest.raises(ValueError, match="fingerprint"):
+            resume_linear_streamed(tmp_path, other_pipe, ds.x_train,
+                                   ds.y_train, cfg=cfg)
+        import dataclasses
+        with pytest.raises(ValueError, match="TrainCfg"):
+            resume_linear_streamed(
+                tmp_path, pipe, ds.x_train, ds.y_train,
+                cfg=dataclasses.replace(cfg, lr=0.1))
+        with pytest.raises(ValueError, match="rows"):
+            resume_linear_streamed(tmp_path, pipe, ds.x_train[:128],
+                                   ds.y_train[:128], cfg=cfg)
+        with pytest.raises(ValueError, match="shuffle_key"):
+            resume_linear_streamed(tmp_path, pipe, ds.x_train, ds.y_train,
+                                   cfg=cfg,
+                                   shuffle_key=jax.random.PRNGKey(5))
+
+    def test_resume_empty_dir_raises(self, problem, tmp_path):
+        ds, pipe, cfg, _ = problem
+        with pytest.raises(FileNotFoundError, match="no committed"):
+            resume_linear_streamed(tmp_path, pipe, ds.x_train, ds.y_train,
+                                   cfg=cfg)
+
+    def test_fresh_fit_refuses_used_dir(self, problem, tmp_path):
+        """A fresh fit into a dir with committed steps would interleave
+        two runs' step numbers — refuse, pointing at resume."""
+        ds, pipe, cfg, p0 = problem
+        save_checkpoint(tmp_path, 5, {"w": jnp.zeros(3)})
+        with pytest.raises(ValueError, match="resume_linear_streamed"):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=tmp_path, ckpt_every=5)
+
+
+class TestCommitWindow:
+    """Kills INSIDE the checkpoint commit protocol: whatever is on disk,
+    an interrupted write must stay invisible and must never wedge the
+    directory (the leftover-.tmp latest_step crash)."""
+
+    def _killed_fit(self, problem, tmp_path, phase):
+        ds, pipe, cfg, p0 = problem
+        plan = ChaosPlan(kill_between_snapshot_and_commit(10, phase=phase))
+        ck = Checkpointer(tmp_path, chaos=plan)
+        # the writer thread dies inside the commit window of step 10; the
+        # error surfaces in the MAIN loop at the next save's wait()
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=ck, ckpt_every=5)
+        drain(ck)
+        return plan
+
+    def test_kill_pre_commit_invisible_and_resumable(self, problem,
+                                                     clean_run, tmp_path):
+        self._killed_fit(problem, tmp_path, "pre_commit")
+        # renamed but never committed: present on disk, invisible to
+        # latest_step, and resume continues from the last GOOD step
+        assert (tmp_path / "step_00000010").exists()
+        assert not (tmp_path / "step_00000010" / "COMMIT").exists()
+        assert latest_step(tmp_path) == 5
+        ds, pipe, cfg, _ = problem
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg)
+        tree_eq(clean_run[0], params)
+
+    def test_kill_pre_rename_leaves_tmp_not_a_crash(self, problem,
+                                                    clean_run, tmp_path):
+        """Regression: a leftover step_*.tmp dir used to make
+        latest_step raise ValueError (int("00000010.tmp")) FOREVER."""
+        self._killed_fit(problem, tmp_path, "pre_rename")
+        assert (tmp_path / "step_00000010.tmp").exists()
+        assert latest_step(tmp_path) == 5          # no ValueError
+        # a restarted Checkpointer sweeps the leftover on construction
+        Checkpointer(tmp_path)
+        assert not (tmp_path / "step_00000010.tmp").exists()
+        ds, pipe, cfg, _ = problem
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg)
+        tree_eq(clean_run[0], params)
+
+    def test_legacy_tmp_with_commit_regression(self, tmp_path):
+        """The exact artifact of the OLD protocol (COMMIT written inside
+        tmp before the rename, crash between the two): a .tmp dir that
+        CONTAINS a COMMIT marker must still be ignored and GC'd."""
+        save_checkpoint(tmp_path, 5, {"w": jnp.ones(4)})
+        bad = tmp_path / "step_00000007.tmp"
+        bad.mkdir()
+        (bad / "COMMIT").write_text("1.0")
+        assert latest_step(tmp_path) == 5
+        assert committed_steps(tmp_path) == [5]
+        removed = gc_incomplete(tmp_path)
+        assert removed == ["step_00000007.tmp"]
+        assert latest_step(tmp_path) == 5
+
+
+class TestAsyncWriteFailure:
+    def test_error_surfaces_on_next_call_and_step_stays_invisible(
+            self, tmp_path):
+        plan = ChaosPlan(fail_async_write(5))
+        ck = Checkpointer(tmp_path, chaos=plan)
+        tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+        ck.save_async(3, tree)
+        ck.wait()
+        ck.save_async(5, tree)           # writer thread raises OSError
+        with pytest.raises(OSError, match="injected write failure"):
+            ck.save_async(7, tree)       # surfaced HERE, not swallowed
+        assert latest_step(tmp_path) == 3   # failed step never committed
+        ck.save_async(7, tree)           # error cleared once surfaced
+        ck.wait()
+        assert latest_step(tmp_path) == 7
+
+    def test_resilient_survives_failed_write(self, problem, clean_run,
+                                             tmp_path):
+        """A failed async write aborts the attempt (loudly), the retry
+        resumes from the last good commit, and the result is still
+        bit-identical."""
+        ds, pipe, cfg, p0 = problem
+        tr = RetryingTrainer(backoff_s=0.0)
+        params = fit_linear_streamed_resilient(
+            p0, pipe, ds.x_train, ds.y_train, cfg=cfg, ckpt=tmp_path,
+            ckpt_every=5, trainer=tr, chaos=ChaosPlan(fail_async_write(10)))
+        tree_eq(clean_run[0], params)
+        assert [e["error"] for e in tr.restart_log] == ["OSError"]
+
+
+class TestWatchdogMidStep:
+    def test_fires_without_end_step(self):
+        """The core fix: a hung step never calls end_step, and the
+        background monitor must fire anyway, within hard_timeout_s."""
+        fired = []
+        wd = StepWatchdog(hard_timeout_s=0.15, on_timeout=fired.append)
+        with wd:
+            wd.start_step()
+            time.sleep(0.6)              # the "hang": no end_step yet
+            assert fired and fired[0] >= 0.15
+            assert wd.fired["kind"] == "hard_timeout"
+            assert wd.fired["step"] == 0
+            with pytest.raises(TrainingAborted):
+                wd.end_step()            # limping home still aborts
+
+    def test_sigint_interrupts_hung_main_thread(self):
+        """Default firing path: SIGINT lands in the main thread MID-hang
+        (long before the hang would have ended) and converts to
+        TrainingAborted via reraise_if_fired."""
+        wd = StepWatchdog(hard_timeout_s=0.2)
+        t0 = time.monotonic()
+        with wd, pytest.raises(TrainingAborted):
+            wd.start_step()
+            try:
+                time.sleep(30.0)         # a hung "step"
+                pytest.fail("watchdog never interrupted the hang")
+            except KeyboardInterrupt as e:
+                wd.reraise_if_fired(e)
+                raise
+        assert time.monotonic() - t0 < 10.0
+
+    def test_real_ctrl_c_not_swallowed(self):
+        wd = StepWatchdog(hard_timeout_s=30.0)
+        with wd:
+            wd.start_step()
+            wd.reraise_if_fired(KeyboardInterrupt())   # no fire: returns
+            wd.end_step()
+
+    def test_hung_training_step_detected_and_resumed(self, problem,
+                                                     clean_run, tmp_path):
+        """End to end: step 7 hangs "forever" (60 s), the watchdog aborts
+        it within seconds, and the resumed run is bit-identical.  The
+        hard timeout is generous enough that only the injected hang —
+        never JIT compilation of the first step — can trip it."""
+        ds, pipe, cfg, p0 = problem
+        wd = StepWatchdog(hard_timeout_s=3.0)
+        t0 = time.monotonic()
+        with pytest.raises(TrainingAborted):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                ckpt=tmp_path, ckpt_every=5, watchdog=wd,
+                                chaos=ChaosPlan(hang_at(7, 60.0)))
+        assert time.monotonic() - t0 < 30.0   # not the 60 s hang
+        assert wd.fired is not None and wd.fired["step"] == 7
+        assert latest_step(tmp_path) == 5
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg)
+        tree_eq(clean_run[0], params)
+
+
+class TestRetryingTrainer:
+    def test_exponential_backoff_and_structured_log(self):
+        sleeps = []
+        tr = RetryingTrainer(max_restarts=5, backoff_s=0.5,
+                             backoff_factor=2.0, sleep_fn=sleeps.append)
+        calls = [0]
+
+        def fn():
+            calls[0] += 1
+            if calls[0] <= 3:
+                raise RuntimeError(f"boom {calls[0]}")
+            return "done"
+
+        assert tr.call(fn) == "done"
+        assert sleeps == [0.5, 1.0, 2.0]
+        assert [e["restart"] for e in tr.restart_log] == [1, 2, 3]
+        assert all(e["error"] == "RuntimeError" and not e["gave_up"]
+                   and "boom" in e["message"] for e in tr.restart_log)
+
+    def test_backoff_is_capped(self):
+        sleeps = []
+        tr = RetryingTrainer(max_restarts=6, backoff_s=1.0,
+                             max_backoff_s=4.0, sleep_fn=sleeps.append)
+        calls = [0]
+
+        def fn():
+            calls[0] += 1
+            if calls[0] <= 5:
+                raise RuntimeError("x")
+            return 1
+
+        tr.call(fn)
+        assert sleeps == [1.0, 2.0, 4.0, 4.0, 4.0]
+
+    def test_gives_up_after_max_restarts(self):
+        events = []
+        tr = RetryingTrainer(max_restarts=2, backoff_s=0.0,
+                             on_restart=events.append,
+                             sleep_fn=lambda s: None)
+        with pytest.raises(RuntimeError, match="always"):
+            tr.call(lambda: (_ for _ in ()).throw(RuntimeError("always")))
+        assert len(events) == 3 and events[-1]["gave_up"]
+
+    def test_training_aborted_is_restartable(self):
+        tr = RetryingTrainer(backoff_s=0.0, sleep_fn=lambda s: None)
+        calls = [0]
+
+        def fn():
+            calls[0] += 1
+            if calls[0] == 1:
+                raise TrainingAborted("hung step")
+            return "recovered"
+
+        assert tr.call(fn) == "recovered"
+        assert tr.restart_log[0]["error"] == "TrainingAborted"
+
+    def test_chaoskill_is_not_survivable(self):
+        tr = RetryingTrainer(backoff_s=0.0, sleep_fn=lambda s: None)
+
+        def fn():
+            raise ChaosKill("preempted")
+
+        with pytest.raises(ChaosKill):
+            tr.call(fn)
+        assert tr.restart_log == []      # SIGKILL is not a restart event
+
+
+class TestResilient:
+    def test_software_fault_bit_identical(self, problem, clean_run,
+                                          tmp_path):
+        ds, pipe, cfg, p0 = problem
+        tr = RetryingTrainer(backoff_s=0.0)
+        params, state = fit_linear_streamed_resilient(
+            p0, pipe, ds.x_train, ds.y_train, cfg=cfg, ckpt=tmp_path,
+            ckpt_every=5, trainer=tr, chaos=ChaosPlan(raise_at(23)),
+            return_state=True)
+        tree_eq(clean_run[0], params)
+        tree_eq(clean_run[1], state)
+        assert [e["error"] for e in tr.restart_log] == ["FaultInjected"]
+
+    def test_process_death_then_fresh_call_resumes(self, problem,
+                                                   clean_run, tmp_path):
+        """ChaosKill escapes the retry loop (it IS process death); the
+        NEXT invocation — the restarted "process" — resumes and lands
+        bit-identically."""
+        ds, pipe, cfg, p0 = problem
+        plan = ChaosPlan(kill_at(17))
+        ck = Checkpointer(tmp_path, chaos=plan)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed_resilient(
+                p0, pipe, ds.x_train, ds.y_train, cfg=cfg, ckpt=ck,
+                ckpt_every=5, chaos=plan)
+        drain(ck)
+        tr = RetryingTrainer(backoff_s=0.0)
+        params = fit_linear_streamed_resilient(
+            p0, pipe, ds.x_train, ds.y_train, cfg=cfg, ckpt=tmp_path,
+            ckpt_every=5, trainer=tr, chaos=plan)
+        tree_eq(clean_run[0], params)
+        assert tr.restart_log == []      # clean resume, no in-process retry
+        assert [e["site"] for e in plan.log()] == ["step"]   # fired once
+
+
+class TestEvalResume:
+    def test_killed_eval_resumes_exactly(self, problem, clean_run,
+                                         tmp_path):
+        ds, pipe, _, _ = problem
+        params = clean_run[0]
+        acc_clean = streamed_accuracy(params, pipe, ds.x_test, ds.y_test)
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            streamed_accuracy(params, pipe, ds.x_test, ds.y_test,
+                              ckpt=ck, ckpt_every=1,
+                              chaos=ChaosPlan(kill_eval_at(2)))
+        drain(ck)
+        acc = resume_streamed_accuracy(tmp_path, params, pipe, ds.x_test,
+                                       ds.y_test)
+        assert acc == acc_clean
+
+    def test_eval_guards_table_digest(self, problem, clean_run, tmp_path):
+        """Resuming an eval with DIFFERENT params would silently mix two
+        models' counts — the table digest guard refuses."""
+        ds, pipe, _, p0 = problem
+        params = clean_run[0]
+        ck = Checkpointer(tmp_path)
+        with pytest.raises(ChaosKill):
+            streamed_accuracy(params, pipe, ds.x_test, ds.y_test,
+                              ckpt=ck, ckpt_every=1,
+                              chaos=ChaosPlan(kill_eval_at(2)))
+        drain(ck)
+        with pytest.raises(ValueError, match="table digest"):
+            resume_streamed_accuracy(tmp_path, p0, pipe, ds.x_test,
+                                     ds.y_test)
+
+
+@multi_device
+class TestElasticReshard:
+    """Checkpointed at 8 devices, resumed at 4 / 1 / 8: the checkpoint
+    stores GLOBAL arrays and restore reshards into whatever mesh exists
+    now.  Same device count resumes bit-identically; across device
+    counts only psum order differs, and final accuracy must not."""
+
+    def _kill_at_8dev(self, problem, ckpt_dir):
+        ds, pipe, cfg, p0 = problem
+        m8 = make_data_mesh(8)
+        ck = Checkpointer(ckpt_dir)
+        with pytest.raises(ChaosKill):
+            fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train, cfg=cfg,
+                                mesh=m8, ckpt=ck, ckpt_every=5,
+                                chaos=ChaosPlan(kill_at(17)))
+        drain(ck)
+        assert latest_step(ckpt_dir) == 15
+
+    def _clean_8dev(self, problem):
+        ds, pipe, cfg, p0 = problem
+        m8 = make_data_mesh(8)
+        params = fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train,
+                                     cfg=cfg, mesh=m8)
+        return params, streamed_accuracy(params, pipe, ds.x_test,
+                                         ds.y_test, mesh=m8)
+
+    def test_resume_same_mesh_bit_identical(self, problem, tmp_path):
+        ds, pipe, cfg, _ = problem
+        clean, _ = self._clean_8dev(problem)
+        self._kill_at_8dev(problem, tmp_path)
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg,
+                                        mesh=make_data_mesh(8))
+        tree_eq(clean, params)
+
+    @pytest.mark.parametrize("ndev", [4, 1])
+    def test_resume_fewer_devices_equal_accuracy(self, problem, tmp_path,
+                                                 ndev):
+        """The elastic contract: 8 -> 4 and 8 -> 1 resumes finish the run
+        and match the 8-device accuracy exactly (0.00 pp gap)."""
+        ds, pipe, cfg, _ = problem
+        _, acc8 = self._clean_8dev(problem)
+        self._kill_at_8dev(problem, tmp_path)
+        mesh = make_data_mesh(ndev)
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg, mesh=mesh)
+        acc = streamed_accuracy(params, pipe, ds.x_test, ds.y_test,
+                                mesh=mesh)
+        assert acc == acc8
+
+    def test_resume_on_unsharded_path(self, problem, tmp_path):
+        """8-device checkpoint resumed with NO mesh at all (mesh=None,
+        the single-process path a salvage job would use)."""
+        ds, pipe, cfg, _ = problem
+        _, acc8 = self._clean_8dev(problem)
+        self._kill_at_8dev(problem, tmp_path)
+        params = resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                        ds.y_train, cfg=cfg)
+        acc = streamed_accuracy(params, pipe, ds.x_test, ds.y_test)
+        assert acc == acc8

@@ -9,8 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (Checkpointer, save_checkpoint,
-                              restore_checkpoint, latest_step)
+from repro.checkpoint import (Checkpointer, committed_steps, gc_incomplete,
+                              save_checkpoint, restore_checkpoint,
+                              latest_step)
 from repro.optim.compression import (error_feedback_compress, init_residual,
                                      int8_compress_decompress)
 from repro.runtime import StepWatchdog, TrainingAborted
@@ -84,6 +85,84 @@ class TestCheckpoint:
                                   shardings=shardings)
         tree_eq(tree, back)
         assert back["w"].sharding == shardings["w"]
+
+
+class TestCommitProtocol:
+    """The commit protocol after the crash-window fix: write into
+    step_*.tmp, rename, THEN write COMMIT — so every on-disk state a
+    crash can leave behind is either invisible or committed, and none of
+    them wedge the directory."""
+
+    def test_commit_written_after_rename(self, tmp_path):
+        save_checkpoint(tmp_path, 3, {"w": jnp.ones(4)})
+        d = tmp_path / "step_00000003"
+        assert (d / "COMMIT").exists()
+        assert not list(tmp_path.glob("*.tmp"))
+
+    def test_latest_step_ignores_tmp_dirs(self, tmp_path):
+        """Regression: int("00000009.tmp") used to raise ValueError and
+        make latest_step unusable forever after one crash."""
+        save_checkpoint(tmp_path, 5, {"w": jnp.ones(4)})
+        (tmp_path / "step_00000009.tmp").mkdir()
+        # the OLD protocol could even leave COMMIT inside the tmp dir
+        (tmp_path / "step_00000009.tmp" / "COMMIT").write_text("1.0")
+        (tmp_path / "notes.txt").write_text("unrelated file")
+        assert latest_step(tmp_path) == 5
+        assert committed_steps(tmp_path) == [5]
+
+    def test_retention_survives_stray_tmp(self, tmp_path):
+        """Retention must prune by committed step, ignoring crash debris
+        (it used to crash sorting int("...tmp"))."""
+        (tmp_path / "step_00000099.tmp").mkdir()
+        for step in [1, 2, 3, 4]:
+            save_checkpoint(tmp_path, step, {"w": jnp.ones(4)}, keep=2)
+        assert committed_steps(tmp_path) == [3, 4]
+        assert (tmp_path / "step_00000099.tmp").exists()  # GC's job, below
+
+    def test_gc_incomplete(self, tmp_path):
+        save_checkpoint(tmp_path, 5, {"w": jnp.ones(4)})
+        (tmp_path / "step_00000007.tmp").mkdir()
+        uncommitted = tmp_path / "step_00000009"
+        uncommitted.mkdir()
+        (uncommitted / "manifest.json").write_text("{}")
+        removed = gc_incomplete(tmp_path)
+        assert sorted(removed) == ["step_00000007.tmp", "step_00000009"]
+        assert latest_step(tmp_path) == 5
+        assert gc_incomplete(tmp_path) == []          # idempotent
+
+    def test_checkpointer_init_sweeps_leftovers(self, tmp_path):
+        save_checkpoint(tmp_path, 5, {"w": jnp.ones(4)})
+        (tmp_path / "step_00000007.tmp").mkdir()
+        Checkpointer(tmp_path)
+        assert not (tmp_path / "step_00000007.tmp").exists()
+        # opt-out for read-only inspection of a crashed dir
+        (tmp_path / "step_00000008.tmp").mkdir()
+        Checkpointer(tmp_path, gc_on_init=False)
+        assert (tmp_path / "step_00000008.tmp").exists()
+
+    def test_async_write_failure_surfaces_and_stays_invisible(
+            self, tmp_path, monkeypatch):
+        """An async writer crash (filesystem fault) must surface on the
+        next save_async/wait and must never commit the failed step."""
+        import repro.checkpoint.checkpointer as ckpt_mod
+        ck = Checkpointer(tmp_path)
+        ck.save_async(1, {"w": jnp.ones(4)})
+        ck.wait()
+
+        real = ckpt_mod._write_shards
+
+        def broken(*a, **kw):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(ckpt_mod, "_write_shards", broken)
+        ck.save_async(2, {"w": jnp.ones(4)})
+        with pytest.raises(OSError, match="disk full"):
+            ck.wait()
+        monkeypatch.setattr(ckpt_mod, "_write_shards", real)
+        assert latest_step(tmp_path) == 1     # step 2 never committed
+        ck.save_async(3, {"w": jnp.ones(4)})  # error already consumed
+        ck.wait()
+        assert latest_step(tmp_path) == 3
 
 
 class TestCompression:
