@@ -1,0 +1,34 @@
+"""Kernel-contract static analysis (DESIGN.md §14).
+
+Inspects jaxprs and ``pl.pallas_call`` structure — no execution, no
+compilation — and mechanically checks the contracts every shipped bug so
+far violated implicitly: VMEM models vs. declared BlockSpecs, index-map
+bounds and emit coverage, donation aliasing, collective axis binding,
+and registry completeness.
+
+    from repro.analysis import run_suite
+    report = run_suite()            # all families, all five checks
+    assert not report.failures, report.to_text()
+
+``tools/kernel_lint.py`` is the CLI; ``compile_guard`` is the reusable
+single-compile streaming assertion.
+"""
+from .compile_guard import CompileGuard, compile_guard
+from .collectives import audit_collectives, check_permutation
+from .completeness import audit_completeness
+from .coverage import audit_coverage
+from .donation import audit_donation, alias_roots
+from .launches import OperandInfo, PallasLaunch, extract_launches
+from .report import CHECKS, Finding, Report
+from .suite import register_builtin_sites, run_suite
+from .vmem import audit_family_vmem, audit_vmem, probe_footprints
+
+__all__ = [
+    "CHECKS", "Finding", "Report",
+    "OperandInfo", "PallasLaunch", "extract_launches",
+    "audit_vmem", "audit_family_vmem", "probe_footprints",
+    "audit_coverage", "audit_donation", "alias_roots",
+    "audit_collectives", "check_permutation", "audit_completeness",
+    "compile_guard", "CompileGuard",
+    "run_suite", "register_builtin_sites",
+]

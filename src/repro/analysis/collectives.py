@@ -1,0 +1,212 @@
+"""Collective/axis-name consistency check over shard_map'd jaxprs.
+
+Walks every ``shard_map`` equation reachable from a traced entry point
+and verifies, against the mesh bound by that shard_map:
+
+  * every psum/pmean/pmax/pmin/all_gather/ppermute/axis_index names a
+    bound mesh axis (an unbound name raises at trace time — the analyzer
+    converts that to a finding instead of a stack trace);
+  * every ppermute ``perm`` is a true permutation of the axis: one pair
+    per shard, distinct sources, distinct destinations, all in range;
+  * no psum consumes the result of another psum in the same body
+    (double-reduced grads), and — when the site declares it — grads are
+    reduced at exactly one blessed point: ``expected_psums`` equations,
+    all over ``expected_axes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+from jax.extend import core as jex_core
+
+from .report import Finding
+
+__all__ = ["audit_collectives", "check_permutation", "collect_shard_maps",
+           "CollectiveUse", "ShardMapInfo"]
+
+_AXIS_PRIMS = {"psum", "pmax", "pmin", "ppermute", "pbroadcast",
+               "all_gather", "all_to_all", "axis_index", "reduce_scatter"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveUse:
+    primitive: str
+    axes: Tuple[str, ...]
+    params: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardMapInfo:
+    mesh_axes: Dict[str, int]
+    body: object                  # the body Jaxpr
+    uses: Tuple[CollectiveUse, ...]
+
+
+def check_permutation(perm, size: int) -> List[str]:
+    """Why ``perm`` is not a permutation of ``range(size)``; [] if it is."""
+    errs: List[str] = []
+    pairs = [tuple(p) for p in perm]
+    srcs = [s for s, _ in pairs]
+    dsts = [d for _, d in pairs]
+    oob = [p for p in pairs
+           if not (0 <= p[0] < size and 0 <= p[1] < size)]
+    if oob:
+        errs.append(f"pairs {oob[:4]} reference shards outside the axis "
+                    f"size {size}")
+    if len(set(srcs)) != len(srcs):
+        errs.append(f"duplicate sources {sorted(set(s for s in srcs if srcs.count(s) > 1))}"
+                    f" — a shard cannot send twice")
+    if len(set(dsts)) != len(dsts):
+        errs.append(f"duplicate destinations "
+                    f"{sorted(set(d for d in dsts if dsts.count(d) > 1))}"
+                    f" — two shards write the same receiver")
+    if not errs and len(pairs) != size:
+        errs.append(f"{len(pairs)} pairs for an axis of {size} shards — "
+                    f"unmatched shards receive unspecified data")
+    return errs
+
+
+def _axes_of(eqn) -> Tuple[str, ...]:
+    axes = eqn.params.get("axes")
+    if axes is None:
+        axes = eqn.params.get("axis_name", ())
+    if isinstance(axes, (str, int)):
+        axes = (axes,)
+    return tuple(a for a in axes if isinstance(a, str))
+
+
+def _collect_uses(jaxpr, out: List[CollectiveUse]) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in _AXIS_PRIMS:
+            out.append(CollectiveUse(primitive=eqn.primitive.name,
+                                     axes=_axes_of(eqn),
+                                     params=dict(eqn.params)))
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for item in vals:
+                if isinstance(item, jex_core.ClosedJaxpr):
+                    _collect_uses(item.jaxpr, out)
+                elif isinstance(item, jex_core.Jaxpr):
+                    _collect_uses(item, out)
+
+
+def _walk_shard_maps(jaxpr, out: List[ShardMapInfo]) -> None:
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "shard_map":
+            mesh = eqn.params["mesh"]
+            mesh_axes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+            body = eqn.params["jaxpr"]
+            body = body.jaxpr if isinstance(body, jex_core.ClosedJaxpr) \
+                else body
+            uses: List[CollectiveUse] = []
+            _collect_uses(body, uses)
+            out.append(ShardMapInfo(mesh_axes=mesh_axes, body=body,
+                                    uses=tuple(uses)))
+            continue
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for item in vals:
+                if isinstance(item, jex_core.ClosedJaxpr):
+                    _walk_shard_maps(item.jaxpr, out)
+                elif isinstance(item, jex_core.Jaxpr):
+                    _walk_shard_maps(item, out)
+
+
+def collect_shard_maps(fn, *args) -> Tuple[ShardMapInfo, ...]:
+    closed = jax.make_jaxpr(fn)(*args)
+    out: List[ShardMapInfo] = []
+    _walk_shard_maps(closed.jaxpr, out)
+    return tuple(out)
+
+
+def _psum_of_psum(body) -> bool:
+    """True when a psum's operand is downstream of another psum's output
+    at the same body level (grads reduced twice)."""
+    reduced: set = set()
+    for eqn in body.eqns:
+        is_psum = eqn.primitive.name == "psum"
+        if is_psum and any(id(v) in reduced for v in eqn.invars
+                           if not isinstance(v, jex_core.Literal)):
+            return True
+        if is_psum or any(id(v) in reduced for v in eqn.invars
+                          if not isinstance(v, jex_core.Literal)):
+            reduced.update(id(v) for v in eqn.outvars)
+    return False
+
+
+def audit_collectives(fn, args, *, name: str = "collective-site",
+                      expected_psums: Optional[int] = None,
+                      expected_axes: Optional[Tuple[str, ...]] = None
+                      ) -> List[Finding]:
+    findings: List[Finding] = []
+    try:
+        smaps = collect_shard_maps(lambda *a: fn(*a), *args)
+    except NameError as e:
+        # "unbound axis name: ..." — a collective names an axis no
+        # enclosing shard_map binds
+        return [Finding(
+            check="collectives", target=name,
+            message=(f"{e} — a psum/ppermute names an axis the enclosing "
+                     f"shard_map does not bind; fix the axis_name or the "
+                     f"mesh axes"))]
+    except Exception as e:
+        return [Finding(
+            check="collectives", target=name,
+            message=f"entry point failed to trace: {type(e).__name__}: {e}")]
+    if not smaps:
+        findings.append(Finding(
+            check="collectives", target=name, severity="warning",
+            message="no shard_map found in trace — site audited nothing"))
+    n_psums = 0
+    psum_axes: set = set()
+    for sm in smaps:
+        for use in sm.uses:
+            for ax in use.axes:
+                if ax not in sm.mesh_axes:
+                    findings.append(Finding(
+                        check="collectives", target=name,
+                        message=(f"{use.primitive} names axis {ax!r} but "
+                                 f"the enclosing shard_map binds "
+                                 f"{sorted(sm.mesh_axes)} — collective "
+                                 f"would be a no-op or trace error")))
+            if use.primitive == "psum":
+                n_psums += 1
+                psum_axes.add(use.axes)
+            if use.primitive == "ppermute":
+                size = 1
+                for ax in use.axes:
+                    size *= sm.mesh_axes.get(ax, 1)
+                for err in check_permutation(use.params.get("perm", ()),
+                                             size):
+                    findings.append(Finding(
+                        check="collectives", target=name,
+                        message=(f"ppermute over {use.axes} is not a true "
+                                 f"permutation: {err}"),
+                        details={"perm": [list(p) for p in
+                                          use.params.get("perm", ())],
+                                 "size": size}))
+        if _psum_of_psum(sm.body):
+            findings.append(Finding(
+                check="collectives", target=name,
+                message=("a psum consumes the result of another psum in "
+                         "the same shard_map body — grads would be "
+                         "reduced twice (scaled by the axis size); keep "
+                         "the all-reduce at the one blessed point "
+                         "(trainer.microbatch_grads)")))
+    if expected_psums is not None and n_psums != expected_psums:
+        findings.append(Finding(
+            check="collectives", target=name,
+            message=(f"expected exactly {expected_psums} psum(s) (loss + "
+                     f"one per grad leaf, at the blessed "
+                     f"microbatch_grads point) but found {n_psums} — a "
+                     f"reduction moved or duplicated"),
+            details={"expected": expected_psums, "found": n_psums}))
+    if expected_axes is not None and psum_axes - {tuple(expected_axes)}:
+        findings.append(Finding(
+            check="collectives", target=name,
+            message=(f"psums reduce over {sorted(psum_axes)} but the site "
+                     f"declares {tuple(expected_axes)} — a grad reduction "
+                     f"crossed onto the wrong mesh axis")))
+    return findings

@@ -1,0 +1,58 @@
+"""compile_guard: the single-compile streaming invariant as a reusable
+context manager.
+
+Streaming paths (DESIGN.md §9/§11) must compile EXACTLY ONE chunk shape
+— ragged tails are padded, never re-traced.  Tests used to assert
+``fn._cache_size() == 1`` ad hoc; the guard generalizes that:
+
+    with compile_guard() as g:
+        g.watch(pipe._chunk_fn())          # expect=1 by default
+        pipe.features(x_with_ragged_tail)
+
+On clean exit the guard verifies each watched jitted function gained
+exactly ``expect`` NEW cache entries since ``watch`` (baseline-relative,
+so pre-warmed functions can be watched mid-life).  An exception inside
+the block propagates untouched — the guard only judges successful runs.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Tuple
+
+__all__ = ["compile_guard", "CompileGuard"]
+
+
+class CompileGuard:
+    def __init__(self) -> None:
+        self._watched: List[Tuple[object, int, int, str]] = []
+
+    def watch(self, fn, *, expect: int = 1, label: Optional[str] = None):
+        """Snapshot ``fn``'s compile-cache size; on guard exit the delta
+        must equal ``expect``.  ``fn`` must be a jitted function (it
+        exposes ``_cache_size``).  Returns ``fn`` for inline use."""
+        cache_size = getattr(fn, "_cache_size", None)
+        if cache_size is None:
+            raise TypeError(
+                f"compile_guard.watch needs a jitted function exposing "
+                f"_cache_size; got {type(fn).__name__}")
+        self._watched.append(
+            (fn, cache_size(), expect,
+             label or getattr(fn, "__name__", None) or repr(fn)))
+        return fn
+
+    def verify(self) -> None:
+        for fn, baseline, expect, label in self._watched:
+            got = fn._cache_size() - baseline
+            if got != expect:
+                raise AssertionError(
+                    f"compile_guard: {label} compiled {got} distinct "
+                    f"shape(s), expected {expect} — a streaming path "
+                    f"re-traced; ragged tails must pad to the one chunk "
+                    f"shape (DESIGN.md §9, §11)")
+
+
+@contextlib.contextmanager
+def compile_guard():
+    guard = CompileGuard()
+    yield guard
+    guard.verify()

@@ -1,0 +1,103 @@
+"""Emit-coverage / index-map bounds check.
+
+Abstractly evaluates every BlockSpec index map of a
+:class:`~repro.analysis.launches.PallasLaunch` over its grid (lexicographic
+order, last axis innermost — the Pallas TPU iteration order) and proves:
+
+  * **input bounds** — no input block index escapes the padded operand's
+    block grid (the ragged-tail bug class: an index map that forgets the
+    clamp reads past the pad);
+  * **output coverage** — every output block is written exactly once.
+    Consecutive revisits of the same block (e.g. an output whose map
+    ignores the contraction axis, accumulated in scratch and emitted on
+    the last step) collapse to one HBM write; *non*-consecutive revisits
+    are a double write (a later visit-run silently overwrites an earlier
+    emit), and blocks never visited are emitted as uninitialized memory.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from typing import List
+
+from .launches import PallasLaunch
+from .report import Finding
+
+__all__ = ["audit_coverage", "grid_points"]
+
+_MAX_POINTS = 65536
+
+
+def grid_points(grid):
+    """Grid iteration order: last axis varies fastest."""
+    return itertools.product(*(range(g) for g in grid))
+
+
+def audit_coverage(launch: PallasLaunch, *, target: str = "",
+                   max_points: int = _MAX_POINTS) -> List[Finding]:
+    target = target or launch.name
+    findings: List[Finding] = []
+    n_points = math.prod(launch.grid) if launch.grid else 1
+    if n_points > max_points:
+        findings.append(Finding(
+            check="coverage", target=target, severity="warning",
+            message=(f"grid {launch.grid} has {n_points} points, above the "
+                     f"{max_points} enumeration cap — probe this kernel at "
+                     f"a smaller shape so coverage can be proven")))
+        return findings
+
+    points = list(grid_points(launch.grid)) if launch.grid else [()]
+
+    for pos, op in enumerate(launch.inputs + launch.outputs):
+        if op.index_map is None or op.block_shape is None:
+            continue
+        bgrid = op.block_grid()
+        seq = []
+        for pt in points:
+            idx = op.index_map(*pt)
+            seq.append(idx)
+            if any(not (0 <= i < g) for i, g in zip(idx, bgrid)):
+                findings.append(Finding(
+                    check="coverage", target=target,
+                    message=(f"{op.role} operand {pos} ({op.name}): index "
+                             f"map returns block {idx} at grid point {pt}, "
+                             f"outside the padded block grid {bgrid} "
+                             f"(operand {op.shape}, block {op.block_shape}) "
+                             f"— clamp or rewrite the index map; OOB blocks "
+                             f"read/write past the operand pad"),
+                    details={"operand": pos, "grid_point": list(pt),
+                             "block_index": list(idx),
+                             "block_grid": list(bgrid)}))
+                break   # one OOB finding per operand is actionable enough
+        if op.role != "out" or len(seq) != len(points):
+            continue
+        # Collapse consecutive revisits: one visit-run == one HBM write.
+        runs = [k for k, _ in itertools.groupby(seq)]
+        counts: dict = {}
+        for idx in runs:
+            counts[idx] = counts.get(idx, 0) + 1
+        doubled = sorted(k for k, c in counts.items() if c > 1)
+        missing = sorted(set(itertools.product(*(range(g) for g in bgrid)))
+                         - set(counts))
+        if doubled:
+            findings.append(Finding(
+                check="coverage", target=target,
+                message=(f"output operand {pos} ({op.name}): block(s) "
+                         f"{doubled[:4]} written by {counts[doubled[0]]} "
+                         f"separate visit-runs over grid {launch.grid} — a "
+                         f"later run overwrites the earlier emit; make the "
+                         f"revisits consecutive (reorder the grid) or "
+                         f"accumulate in scratch"),
+                details={"operand": pos,
+                         "doubled": [list(d) for d in doubled[:16]]}))
+        if missing:
+            findings.append(Finding(
+                check="coverage", target=target,
+                message=(f"output operand {pos} ({op.name}): block(s) "
+                         f"{missing[:4]} of block grid {bgrid} are never "
+                         f"written over grid {launch.grid} — those tiles "
+                         f"ship uninitialized memory; the index map must "
+                         f"cover every output block"),
+                details={"operand": pos,
+                         "missing": [list(m) for m in missing[:16]]}))
+    return findings

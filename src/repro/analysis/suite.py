@@ -1,0 +1,105 @@
+"""The full kernel-contract suite: one call, one Report.
+
+``run_suite()`` imports every module that self-registers probes and
+analysis sites (kernels/ops, pipeline/featurize, training/linear_trainer,
+kernels/flash_attention), then runs all five checks:
+
+  completeness  — registry surface per op (impl trio, model, alias, probe)
+  vmem          — _VMEM_MODELS vs declared BlockSpec+scratch footprints
+  coverage      — index-map bounds + write-exactly-once per output block
+  donation      — donated-and-returned / donated-caller-live (PR 4 rule)
+  collectives   — bound axes, true-permutation ppermutes, blessed psums
+
+tools/kernel_lint.py is the CLI front end; CI runs it ``--all --strict``
+on 1 and 8 devices so a new op family missing any contract fails the
+build.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Iterable, Optional
+
+from ..kernels import registry
+from .collectives import audit_collectives
+from .completeness import audit_completeness
+from .coverage import audit_coverage
+from .donation import audit_donation
+from .report import CHECKS, Finding, Report
+from .vmem import audit_family_vmem, audit_vmem, probe_footprints
+
+__all__ = ["run_suite", "register_builtin_sites"]
+
+_SITE_MODULES = (
+    "repro.kernels.ops",
+    "repro.pipeline.featurize",
+    "repro.training.linear_trainer",
+    "repro.kernels.flash_attention",
+)
+
+
+def register_builtin_sites() -> None:
+    """Import every module that self-registers probes/sites."""
+    for mod in _SITE_MODULES:
+        importlib.import_module(mod)
+
+
+def _coverage_blocks(fam: str):
+    """One ragged-tail block choice per family: the heuristic pick at the
+    representative shape — small grids, so coverage enumerates fully."""
+    return registry.choose_blocks(48, 96, 160, op=fam)
+
+
+def run_suite(families: Optional[Iterable[str]] = None, *,
+              checks: Iterable[str] = CHECKS,
+              exhaustive: bool = False) -> Report:
+    register_builtin_sites()
+    checks = tuple(checks)
+    rep = Report()
+    fams = tuple(families) if families else registry.model_families()
+
+    if "completeness" in checks:
+        found = audit_completeness()
+        rep.extend(found)
+        for op in registry.registered_ops():
+            if families and registry.family(op) not in fams \
+                    and op not in fams:
+                continue
+            rep.mark(op, "completeness", found)
+
+    if "vmem" in checks:
+        stats: dict = {}
+        found = audit_vmem(fams, exhaustive=exhaustive, stats=stats)
+        rep.extend(found)
+        rep.stats["vmem"] = stats
+        for fam in fams:
+            rep.mark(fam, "vmem", found)
+
+    if "coverage" in checks:
+        for fam in fams:
+            found = []
+            for rec in probe_footprints(fam, _coverage_blocks(fam)):
+                found.extend(audit_coverage(rec["launch"], target=fam))
+            rep.extend(found)
+            rep.mark(fam, "coverage", found)
+
+    if "donation" in checks:
+        for site in registry.donation_sites():
+            case = site.build()
+            found = audit_donation(case["fn"], case["args"],
+                                   donate_argnums=case.get(
+                                       "donate_argnums", ()),
+                                   name=site.name)
+            rep.extend(found)
+            rep.mark(site.name, "donation", found)
+
+    if "collectives" in checks:
+        for site in registry.collective_sites():
+            case = site.build()
+            found = audit_collectives(
+                case["fn"], case["args"], name=site.name,
+                expected_psums=case.get("expected_psums"),
+                expected_axes=case.get("expected_axes"))
+            rep.extend(found)
+            rep.mark(site.name, "collectives", found)
+
+    return rep

@@ -1,0 +1,159 @@
+"""VMEM model audit: registry `_VMEM_MODELS` vs. what kernels declare.
+
+For each model family the audit traces the family's registered
+:class:`~repro.kernels.registry.LaunchProbe` members at a set of block
+choices (BLOCK_TABLE entries, the choose_blocks heuristic, and the
+corners of the block_candidates space — or every candidate with
+``exhaustive=True``) and reconstructs the *actual* single-buffered
+per-step VMEM working set from the launch's BlockSpecs + scratch shapes.
+
+Semantics (DESIGN.md §14): "actual" counts ONE copy of every VMEM operand
+block plus declared scratch; the 8MB `_VMEM_BUDGET` is half the ~16MB
+core so Mosaic's pipeline double-buffering lives in the reserved half.
+A family fails when
+
+  * any probed launch's actual footprint exceeds the budget (the model
+    admitted a block choice the kernel cannot honor), or
+  * the model *underestimates* the worst member's actual footprint
+    (any amount — an optimistic model silently overbooks VMEM), or
+  * the model overestimates by more than ``tolerance`` (default 10% —
+    a stale model that forbids legal block choices).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from ..kernels import registry
+from .launches import extract_launches
+from .report import Finding
+
+__all__ = ["audit_vmem", "audit_family_vmem", "probe_footprints",
+           "audit_blocks"]
+
+# Representative problem shape for enumerating block_candidates per
+# family; probe shapes themselves derive from the *blocks* (2x + ragged
+# tail), so this only bounds which candidates exist.
+_REP_SHAPE = (300, 700, 300)
+
+
+def _corner_candidates(cands: Iterable[Tuple[int, int, int]]
+                       ) -> List[Tuple[int, int, int]]:
+    """Candidates where every axis sits at its min or max within the set —
+    the extremes that expose a wrong per-term model coefficient without
+    sweeping the whole grid."""
+    cands = list(cands)
+    if not cands:
+        return []
+    lo = tuple(min(c[i] for c in cands) for i in range(3))
+    hi = tuple(max(c[i] for c in cands) for i in range(3))
+    return [c for c in cands
+            if all(c[i] in (lo[i], hi[i]) for i in range(3))]
+
+
+def audit_blocks(fam: str) -> List[Tuple[int, int, int]]:
+    """The default block choices audited for a family: table entries +
+    the heuristic choice + candidate corners."""
+    blocks = [v for (f, *_), v in registry.BLOCK_TABLE.items() if f == fam]
+    blocks.append(registry.choose_blocks(*_REP_SHAPE, op=fam))
+    blocks.extend(_corner_candidates(
+        registry.block_candidates(*_REP_SHAPE, op=fam)))
+    return sorted(set(blocks))
+
+
+def probe_footprints(fam: str, blocks: Tuple[int, int, int]
+                     ) -> List[dict]:
+    """Trace every registered probe of ``fam`` at ``blocks`` and return
+    per-probe records: op, legalized blocks, per-launch actual bytes."""
+    records = []
+    for probe in registry.family_probes(fam):
+        fn, args, legal = probe.build(*blocks)
+        launches = extract_launches(fn, *args)
+        for launch in launches:
+            records.append({
+                "op": probe.op,
+                "blocks": tuple(legal),
+                "launch": launch,
+                "actual_bytes": launch.vmem_bytes(),
+            })
+    return records
+
+
+def audit_family_vmem(fam: str, *,
+                      blocks_list: Optional[List[Tuple[int, int, int]]] = None,
+                      model=None, budget: Optional[int] = None,
+                      tolerance: float = 0.10,
+                      stats: Optional[Dict] = None) -> List[Finding]:
+    """Audit one family; ``model``/``budget`` overrides exist so the test
+    fixture zoo can demonstrate each failure mode deliberately."""
+    findings: List[Finding] = []
+    budget = registry.vmem_budget() if budget is None else budget
+    model = model or (lambda b1, b2, bd: registry.vmem_bytes(
+        b1, b2, bd, op=fam))
+    if not registry.family_probes(fam):
+        findings.append(Finding(
+            check="vmem", target=fam,
+            message=(f"family {fam!r} has a VMEM model but no registered "
+                     f"LaunchProbe — add a registry.register_probe({fam!r}, "
+                     f"op=...) builder in kernels/ops.py so the model can "
+                     f"be audited")))
+        return findings
+
+    blocks_list = audit_blocks(fam) if blocks_list is None else blocks_list
+    worst_ratio = 0.0
+    for blocks in blocks_list:
+        records = probe_footprints(fam, blocks)
+        # Model is evaluated at the legalized blocks the kernel actually
+        # used (packed families round bk to a word multiple).
+        actual = max(r["actual_bytes"] for r in records)
+        worst = max(records, key=lambda r: r["actual_bytes"])
+        est = model(*worst["blocks"])
+        if actual > budget:
+            findings.append(Finding(
+                check="vmem", target=fam,
+                message=(f"blocks {blocks}: actual per-step VMEM "
+                         f"{actual} B (op {worst['op']}) exceeds the "
+                         f"{budget} B budget — the model admitted a block "
+                         f"choice the kernel cannot honor; shrink the "
+                         f"candidate space or fix the model"),
+                details={"blocks": list(blocks), "actual": actual,
+                         "budget": budget, "op": worst["op"]}))
+        if est < actual:
+            findings.append(Finding(
+                check="vmem", target=fam,
+                message=(f"blocks {blocks}: _VMEM_MODELS[{fam!r}] estimates "
+                         f"{est} B but op {worst['op']} declares {actual} B "
+                         f"of BlockSpec+scratch — an optimistic model "
+                         f"overbooks VMEM; raise the model to cover the "
+                         f"worst family member"),
+                details={"blocks": list(blocks), "model": est,
+                         "actual": actual, "op": worst["op"]}))
+        elif actual and est > actual * (1.0 + tolerance):
+            findings.append(Finding(
+                check="vmem", target=fam,
+                message=(f"blocks {blocks}: _VMEM_MODELS[{fam!r}] estimates "
+                         f"{est} B, {est / actual:.2f}x the {actual} B the "
+                         f"worst member ({worst['op']}) actually declares — "
+                         f">{tolerance:.0%} drift forbids legal block "
+                         f"choices; tighten the model"),
+                details={"blocks": list(blocks), "model": est,
+                         "actual": actual, "ratio": est / actual}))
+        if actual:
+            worst_ratio = max(worst_ratio, est / actual)
+    if stats is not None:
+        stats[fam] = {"n_blocks_audited": len(blocks_list),
+                      "max_model_over_actual": round(worst_ratio, 4)}
+    return findings
+
+
+def audit_vmem(families: Optional[Iterable[str]] = None, *,
+               exhaustive: bool = False, tolerance: float = 0.10,
+               stats: Optional[Dict] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for fam in (families or registry.model_families()):
+        blocks_list = None
+        if exhaustive:
+            blocks_list = sorted(set(
+                registry.block_candidates(*_REP_SHAPE, op=fam)))
+        findings.extend(audit_family_vmem(
+            fam, blocks_list=blocks_list, tolerance=tolerance, stats=stats))
+    return findings

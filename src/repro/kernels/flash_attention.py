@@ -35,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import registry
+
 NEG_INF = -1e30
 
 
@@ -590,3 +592,46 @@ def _ring_bwd(window, block, interpret, mesh, seq_axes, batch_axes, res,
 
 
 ring_flash_attention.defvjp(_ring_fwd, _ring_bwd)
+
+
+# ---------------------------------------------------------------------------
+# analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# The shard_map'd attention schedules, registered for the collective
+# lint: bound axis names, true-permutation ppermutes (the forward AND
+# reverse rings), no double reductions.  Sized to whatever device count
+# the host exposes, so the 1-dev and forced-8-dev CI runs both audit a
+# real mesh.
+
+def _analysis_attn_mesh():
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(1, -1), ("data", "model"))
+
+
+@registry.register_collective_site("attention.flash_allgather")
+def _collective_site_allgather():
+    mesh = _analysis_attn_mesh()
+    n = mesh.shape["model"]
+    q = jax.ShapeDtypeStruct((1, 8 * n, 2, 8), jnp.float32)
+
+    def fn(q, k, v):
+        return sharded_flash_attention(q, k, v, 0, 4, True, mesh,
+                                       ("model",), ())
+    return {"fn": fn, "args": (q, q, q), "expected_psums": 0}
+
+
+@registry.register_collective_site("attention.flash_ring")
+def _collective_site_ring():
+    mesh = _analysis_attn_mesh()
+    n = mesh.shape["model"]
+    q = jax.ShapeDtypeStruct((1, 8 * n, 2, 8), jnp.float32)
+
+    def fn(q, k, v):
+        # grad drives the reverse-ring backward through the custom_vjp
+        def loss(q, k, v):
+            return ring_flash_attention(q, k, v, 0, 4, True, mesh,
+                                        ("model",), ()).sum()
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    return {"fn": fn, "args": (q, q, q), "expected_psums": 0}

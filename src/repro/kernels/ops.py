@@ -24,7 +24,8 @@ from repro.kernels.cws_hash import (cws_hash_pallas, cws_encode_pallas,
                                     cws_hash_rng_pallas,
                                     cws_encode_rng_pallas,
                                     cws_encode_packed_pallas,
-                                    cws_encode_rng_packed_pallas)
+                                    cws_encode_rng_packed_pallas,
+                                    _packed_bk)
 from repro.kernels.minmax_gram import minmax_gram_pallas, min_sum_pallas
 
 
@@ -387,3 +388,100 @@ def seq_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 cws_hash_ref = ref.cws_hash_ref
 minmax_gram_ref = ref.minmax_gram_ref
 min_sum_ref = ref.min_sum_ref
+
+
+# ---------------------------------------------------------------------------
+# analysis launch probes (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# One LaunchProbe per family member whose BlockSpec+scratch footprint can
+# be the family worst case.  Probe shapes are 2x the blocks plus a ragged
+# tail on every axis (so nothing clamps AND the pad/coverage logic is
+# exercised); args are ShapeDtypeStructs — tracing a probe never
+# materializes data or compiles.  The VMEM audit evaluates _VMEM_MODELS
+# at the *legalized* blocks each probe returns.
+
+def _probe_sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _probe_shape(b1, b2, bd):
+    return 2 * b1 + 3, 2 * bd + 5, 2 * b2 + 3
+
+
+@registry.register_probe("cws", op="cws_hash")
+def _probe_cws_hash(b1, b2, bd):
+    n, d, k = _probe_shape(b1, b2, bd)
+    x = _probe_sds((n, d))
+    p = _probe_sds((d, k))
+
+    def fn(x, r, log_c, beta):
+        return cws_hash_pallas(x, r, log_c, beta, bn=b1, bk=b2, bd=bd,
+                               interpret=True)
+    return fn, (x, p, p, p), (b1, b2, bd)
+
+
+@registry.register_probe("cws", op="cws_encode")
+def _probe_cws_encode(b1, b2, bd):
+    n, d, k = _probe_shape(b1, b2, bd)
+    x = _probe_sds((n, d))
+    p = _probe_sds((d, k))
+
+    def fn(x, r, log_c, beta):
+        return cws_encode_pallas(x, r, log_c, beta, b_i=2, b_t=2,
+                                 bn=b1, bk=b2, bd=bd, interpret=True)
+    return fn, (x, p, p, p), (b1, b2, bd)
+
+
+@registry.register_probe("cws_rng", op="cws_hash_rng")
+def _probe_cws_hash_rng(b1, b2, bd):
+    n, d, k = _probe_shape(b1, b2, bd)
+
+    def fn(x, key):
+        return cws_hash_rng_pallas(x, key, k, bn=b1, bk=b2, bd=bd,
+                                   interpret=True)
+    return fn, (_probe_sds((n, d)), jax.random.PRNGKey(0)), (b1, b2, bd)
+
+
+@registry.register_probe("cws_rng", op="cws_encode_rng")
+def _probe_cws_encode_rng(b1, b2, bd):
+    n, d, k = _probe_shape(b1, b2, bd)
+
+    def fn(x, key):
+        return cws_encode_rng_pallas(x, key, k, b_i=2, b_t=2,
+                                     bn=b1, bk=b2, bd=bd, interpret=True)
+    return fn, (_probe_sds((n, d)), jax.random.PRNGKey(0)), (b1, b2, bd)
+
+
+@registry.register_probe("cws_packed", op="cws_encode_packed")
+def _probe_cws_encode_packed(b1, b2, bd):
+    # b_i + b_t = 8: the widest packed b, the footprint the model covers
+    n, d, k = _probe_shape(b1, b2, bd)
+    x = _probe_sds((n, d))
+    p = _probe_sds((d, k))
+    legal = (b1, _packed_bk(b2, k, 8), bd)
+
+    def fn(x, r, log_c, beta):
+        return cws_encode_packed_pallas(x, r, log_c, beta, b_i=4, b_t=4,
+                                        bn=b1, bk=b2, bd=bd, interpret=True)
+    return fn, (x, p, p, p), legal
+
+
+@registry.register_probe("cws_rng_packed", op="cws_encode_rng_packed")
+def _probe_cws_encode_rng_packed(b1, b2, bd):
+    n, d, k = _probe_shape(b1, b2, bd)
+    legal = (b1, _packed_bk(b2, k, 8), bd)
+
+    def fn(x, key):
+        return cws_encode_rng_packed_pallas(x, key, k, b_i=4, b_t=4,
+                                            bn=b1, bk=b2, bd=bd,
+                                            interpret=True)
+    return fn, (_probe_sds((n, d)), jax.random.PRNGKey(0)), legal
+
+
+@registry.register_probe("min_sum", op="min_sum")
+def _probe_min_sum(b1, b2, bd):
+    m, d, n2 = _probe_shape(b1, b2, bd)
+
+    def fn(x, y):
+        return min_sum_pallas(x, y, bm=b1, bn=b2, bd=bd, interpret=True)
+    return fn, (_probe_sds((m, d)), _probe_sds((n2, d))), (b1, b2, bd)

@@ -25,10 +25,11 @@ call sites.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import pathlib
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 
@@ -38,6 +39,11 @@ __all__ = [
     "choose_blocks",
     "update_block_table", "save_block_table", "load_block_table",
     "block_candidates", "vmem_bytes", "table_key", "BLOCK_TABLE",
+    # introspection surface consumed by repro.analysis / tools/kernel_lint
+    "registered_ops", "family", "model_families", "vmem_budget",
+    "has_vmem_model", "LaunchProbe", "register_probe", "family_probes",
+    "probe_families", "force_donation", "register_donation_site",
+    "donation_sites", "register_collective_site", "collective_sites",
 ]
 
 
@@ -88,13 +94,34 @@ def pallas_impl(op: str = "") -> str:
     return "pallas" if on_tpu() else "pallas-interpret"
 
 
+_FORCE_DONATE = False
+
+
 def donate_argnums(*argnums: int) -> Tuple[int, ...]:
     """THE donation policy for launch-shaped jits: donate on TPU (XLA
     reuses the buffer for the output), empty elsewhere (an int32 output
     can never alias an fp32 input on CPU, so donation would only warn).
     Shared by the pipeline chunk fns and the streaming trainer so every
     donating call site gates identically."""
-    return tuple(argnums) if on_tpu() else ()
+    return tuple(argnums) if (on_tpu() or _FORCE_DONATE) else ()
+
+
+@contextlib.contextmanager
+def force_donation():
+    """Make donate_argnums return its argnums regardless of backend.
+
+    Tracing a donating jit never compiles, so the donation analyzer can
+    reconstruct the TPU-shaped ``donated_invars`` on any host.  Jits built
+    *before* entering the context keep their (empty) donation; callers
+    must construct the entry points they want audited inside the block.
+    """
+    global _FORCE_DONATE
+    prev = _FORCE_DONATE
+    _FORCE_DONATE = True
+    try:
+        yield
+    finally:
+        _FORCE_DONATE = prev
 
 
 def resolve(op: str, impl: str | None = None) -> KernelImpl:
@@ -148,13 +175,15 @@ _VMEM_MODELS: Dict[str, Callable[[int, int, int], int]] = {
     # x tile + 3 regenerated param tiles (scratch, single-buffered — no
     # pipelined second copy) + 3 accumulators + 2 output tiles
     "cws_rng": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk + 5 * bn * bk),
-    # packed-emit twins: the int32 output tile shrinks to bn*bk*b/32
-    # uint32 words — modeled at the widest packed b (8 -> bk/4 words),
-    # so every legal b fits whatever these admit
+    # packed-emit twins: 3 fp32 accumulators (best_a/best_i/best_t) plus
+    # the packed uint32 output tile of bn*bk*b/32 words — modeled at the
+    # widest packed b (8 -> bk/4 words -> bn*bk bytes), so every legal b
+    # fits whatever these admit.  Audited against the BlockSpec/scratch
+    # footprint the kernels actually declare by repro.analysis.vmem.
     "cws_packed": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk
-                                          + 4 * bn * bk) + bn * bk,
+                                          + 3 * bn * bk) + bn * bk,
     "cws_rng_packed": lambda bn, bk, bd: 4 * (bn * bd + 3 * bd * bk
-                                              + 4 * bn * bk) + bn * bk,
+                                              + 3 * bn * bk) + bn * bk,
     # x tile + y tile + accumulator + output tile
     "min_sum": lambda bm, bn, bd: 4 * (bm * bd + bn * bd + 2 * bm * bn),
 }
@@ -275,3 +304,115 @@ def choose_blocks(n: int, d: int, k: int, *,
     while model(b1, b2, bd) > _VMEM_BUDGET and b2 > 8:
         b2 //= 2
     return b1, b2, bd
+
+
+# ---------------------------------------------------------------------------
+# introspection surface (consumed by repro.analysis / tools/kernel_lint)
+# ---------------------------------------------------------------------------
+# The registry is the single place that knows which op families exist, what
+# VMEM model each claims, and (via the hooks below) how to build a traceable
+# launch for any block choice plus which jitted/shard_mapped entry points
+# declare donation or collectives.  Kernel and pipeline modules self-register
+# against these hooks at import, so a new op family that skips any of them is
+# caught mechanically by the completeness check rather than per-PR review.
+
+
+def registered_ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def lookup(op: str, name: str) -> KernelImpl:
+    """Like resolve, but without the backend-availability gate — for
+    introspection (signature checks) of impls the current host cannot
+    run."""
+    return _REGISTRY[op][name]
+
+
+def family(op: str) -> str:
+    """Public alias-resolution: op name -> VMEM-model family name."""
+    return _family(op)
+
+
+def model_families() -> Tuple[str, ...]:
+    return tuple(sorted(_VMEM_MODELS))
+
+
+def vmem_budget() -> int:
+    return _VMEM_BUDGET
+
+
+def has_vmem_model(op: str) -> bool:
+    return _family(op) in _VMEM_MODELS
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchProbe:
+    """A recipe for tracing one family member at a chosen block size.
+
+    ``build(b1, b2, bd)`` returns ``(fn, args, blocks)`` where tracing
+    ``fn(*args)`` (args may be ShapeDtypeStructs — nothing executes)
+    contains at least one pallas_call whose tile sizes are exactly
+    ``blocks``, the post-legalization (b1, b2, bd) the kernel will use.
+    Probe shapes are sized so no block is clamped and every axis has a
+    ragged tail, which makes the same trace serve both the VMEM audit and
+    the emit-coverage check.
+    """
+    family: str
+    op: str
+    build: Callable[[int, int, int], tuple]
+
+
+_PROBES: Dict[str, List[LaunchProbe]] = {}
+
+
+def register_probe(fam: str, *, op: str):
+    """Decorator: register a LaunchProbe builder for a model family."""
+    def deco(build: Callable) -> Callable:
+        _PROBES.setdefault(fam, []).append(
+            LaunchProbe(family=fam, op=op, build=build))
+        return build
+    return deco
+
+
+def family_probes(fam: str) -> Tuple[LaunchProbe, ...]:
+    return tuple(_PROBES.get(fam, ()))
+
+
+def probe_families() -> Tuple[str, ...]:
+    return tuple(sorted(_PROBES))
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalysisSite:
+    """A named entry point the analyzer audits: ``build()`` returns a
+    check-specific case object (see repro.analysis.donation/collectives).
+    Builders are lazy — they may construct pipelines/meshes — and must be
+    cheap enough to run under CI."""
+    name: str
+    build: Callable[[], object]
+
+
+_DONATION_SITES: Dict[str, AnalysisSite] = {}
+_COLLECTIVE_SITES: Dict[str, AnalysisSite] = {}
+
+
+def register_donation_site(name: str):
+    def deco(build: Callable) -> Callable:
+        _DONATION_SITES[name] = AnalysisSite(name=name, build=build)
+        return build
+    return deco
+
+
+def donation_sites() -> Tuple[AnalysisSite, ...]:
+    return tuple(_DONATION_SITES[k] for k in sorted(_DONATION_SITES))
+
+
+def register_collective_site(name: str):
+    def deco(build: Callable) -> Callable:
+        _COLLECTIVE_SITES[name] = AnalysisSite(name=name, build=build)
+        return build
+    return deco
+
+
+def collective_sites() -> Tuple[AnalysisSite, ...]:
+    return tuple(_COLLECTIVE_SITES[k] for k in sorted(_COLLECTIVE_SITES))

@@ -482,3 +482,66 @@ class FeaturePipeline:
         xp = jnp.pad(x, ((0, pad), (0, 0)))   # all-zero pad rows -> bucket 0
         fn = self._sharded_chunk_fn(mesh, donate=False)
         return fn(xp, self._state())[:n]
+
+
+# ---------------------------------------------------------------------------
+# analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# The pipeline's donating entry points, registered for the donation-safety
+# lint: builders construct a tiny pipeline UNDER registry.force_donation()
+# so the traced jaxprs carry the TPU-shaped donated_invars on any host.
+# "pipeline.features_streamed" walks the caller path that shipped the
+# PR 4 alias bug; "pipeline.features_sharded" pins its fix (the
+# non-donating twin on whole-array launches).
+
+def _analysis_pipe(*, packed: bool = False) -> "FeaturePipeline":
+    spec = FeatureSpec(num_hashes=16, b_i=4, b_t=2 if packed else 0,
+                       packed=packed)
+    return FeaturePipeline.create_regen(jax.random.PRNGKey(0), 24, spec,
+                                        row_chunk=8)
+
+
+@registry.register_donation_site("pipeline.launch_chunk")
+def _donation_site_launch_chunk():
+    with registry.force_donation():
+        pipe = _analysis_pipe()
+        fn = pipe._chunk_fn()
+    chunk = jax.ShapeDtypeStruct((8, 24), jnp.float32)
+    return {"fn": lambda c, s: fn(c, s), "args": (chunk, pipe._state()),
+            "donate_argnums": (0,)}
+
+
+@registry.register_donation_site("pipeline.features_streamed")
+def _donation_site_features_streamed():
+    with registry.force_donation():
+        pipe = _analysis_pipe()
+        pipe._chunk_fn()            # the donating jit the stream launches
+    x = jax.ShapeDtypeStruct((27, 24), jnp.float32)   # ragged tail chunk
+    return {"fn": lambda x: pipe._features_streamed(x), "args": (x,),
+            "donate_argnums": ()}
+
+
+@registry.register_donation_site("pipeline.features_sharded")
+def _donation_site_features_sharded():
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh()
+    with registry.force_donation():
+        pipe = _analysis_pipe()
+        pipe._sharded_chunk_fn(mesh, donate=False)
+    x = jax.ShapeDtypeStruct((7, 24), jnp.float32)    # pad may be zero
+    return {"fn": lambda x: pipe._features_sharded(x, mesh),
+            "args": (x,), "donate_argnums": ()}
+
+
+@registry.register_collective_site("pipeline.sharded_chunk")
+def _collective_site_sharded_chunk():
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh()
+    ndev = data_axis_size(mesh)
+    pipe = _analysis_pipe()
+    fn = pipe._sharded_chunk_fn(mesh, donate=False)
+    x = jax.ShapeDtypeStruct((8 * ndev, 24), jnp.float32)
+    # featurization is embarrassingly parallel over rows: the shard_map
+    # must contain NO cross-device reduction
+    return {"fn": lambda x, s: fn(x, s), "args": (x, pipe._state()),
+            "expected_psums": 0}

@@ -692,3 +692,59 @@ def resume_streamed_accuracy(ckpt, params: LinearParams,
                       ck=None, ckpt_every=0, chaos=chaos, base_lo=lo,
                       base_chunk=int(ev["next_chunk"]),
                       correct=restored["correct"], total=n)
+
+
+# ---------------------------------------------------------------------------
+# analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# The trainer's donating/shard_mapped update steps, registered for the
+# donation and collective lints.  Builders construct a tiny pipeline +
+# optimizer; args are ShapeDtypeStructs where possible so auditing never
+# materializes a batch or compiles a step.
+
+def _analysis_setup(mesh=None):
+    from repro.pipeline import FeatureSpec
+    pipe = FeaturePipeline.create_regen(
+        jax.random.PRNGKey(0), 16, FeatureSpec(num_hashes=16, b_i=2),
+        row_chunk=8)
+    ndev = 1 if mesh is None else data_axis_size(mesh)
+    cfg = TrainCfg(n_classes=3, steps=4, batch_size=2 * ndev)
+    tx = make_linear_tx(cfg)
+    params = init_bag(jax.random.PRNGKey(1), pipe.num_features,
+                      cfg.n_classes)
+    return pipe, cfg, tx, params
+
+
+@registry.register_donation_site("trainer.update_step")
+def _donation_site_update_step():
+    with registry.force_donation():
+        pipe, cfg, tx, params = _analysis_setup()
+        step = _make_update_step(cfg, tx, 1, _bag_logits_fn(pipe))
+    state = tx.init(params)
+    fb = jax.ShapeDtypeStruct((cfg.batch_size, pipe.spec.num_hashes),
+                              jnp.int32)
+    yb = jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32)
+    i = jnp.zeros((), jnp.int32)
+    return {"fn": lambda *a: step(*a), "args": (params, state, fb, yb, i),
+            "donate_argnums": (0, 1)}
+
+
+@registry.register_collective_site("trainer.sharded_update")
+def _collective_site_sharded_update():
+    from repro.launch.mesh import make_data_mesh
+    mesh = make_data_mesh()
+    with registry.force_donation():
+        pipe, cfg, tx, params = _analysis_setup(mesh)
+        step = _make_sharded_update_step(cfg, tx, 1, pipe, mesh,
+                                         featurize=True)
+    state = tx.init(params)
+    xb = jax.ShapeDtypeStruct((cfg.batch_size, pipe.dim), jnp.float32)
+    yb = jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32)
+    i = jnp.zeros((), jnp.int32)
+    # the blessed-point contract: ONE psum per grad leaf plus one for the
+    # loss, all inside microbatch_grads, all over the data axis
+    n_grad_leaves = len(jax.tree_util.tree_leaves(params))
+    return {"fn": lambda *a: step(*a),
+            "args": (params, state, pipe._state(), xb, yb, i),
+            "expected_psums": n_grad_leaves + 1,
+            "expected_axes": ("data",)}

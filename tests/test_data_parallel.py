@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import compile_guard
 from repro.core.linear_model import TrainCfg, init_bag
 from repro.data.synthetic import make_template_classification
 from repro.launch.mesh import data_axis_size, make_data_mesh, make_local_mesh
@@ -90,8 +91,9 @@ class TestShardedStreamedFeatures:
         pipe = self._pipe(row_chunk=8)
         x = rand_nonneg(jax.random.PRNGKey(5), (3 * pipe.chunk_rows(mesh)
                                                 + 5, 18))
-        pipe.features(x, mesh=mesh)
-        assert pipe._sharded_chunk_fn(mesh)._cache_size() == 1
+        with compile_guard() as g:
+            g.watch(pipe._sharded_chunk_fn(mesh), label="sharded chunk_fn")
+            pipe.features(x, mesh=mesh)
 
     def test_tiny_n_below_ndev(self, mesh):
         """n < ndev: some shards are ALL pad rows — they must featurize
@@ -315,6 +317,8 @@ class TestMultiDeviceParity:
                                       row_chunk=12)   # lcm(12, 8) = 24
         assert pipe.chunk_rows(mesh) == 24
         x = rand_nonneg(jax.random.PRNGKey(13), (61, 18))  # 24+24+13
-        np.testing.assert_array_equal(np.asarray(pipe.features(x, mesh=mesh)),
+        with compile_guard() as g:
+            g.watch(pipe._sharded_chunk_fn(mesh), label="sharded chunk_fn")
+            sharded = pipe.features(x, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(sharded),
                                       np.asarray(pipe.features(x)))
-        assert pipe._sharded_chunk_fn(mesh)._cache_size() == 1

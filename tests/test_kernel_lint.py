@@ -1,0 +1,358 @@
+"""The kernel-contract analyzer vs a fixture zoo of deliberately-broken
+kernels — every check class must catch its seeded bug with an actionable
+message — plus the green path: the real registry passes the full suite,
+and the packed VMEM models (fixed this PR) are pinned exact against the
+footprints the kernels declare.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.analysis import (audit_collectives, audit_completeness,
+                            audit_coverage, audit_donation,
+                            audit_family_vmem, check_permutation,
+                            compile_guard, extract_launches,
+                            probe_footprints, run_suite)
+from repro.kernels import ops, registry  # noqa: F401  (probe registration)
+
+
+def _messages(findings):
+    return "\n".join(f.message for f in findings)
+
+
+def _fixture_call(in_map, out_map, grid=(2,), x_shape=(8, 8),
+                  out_shape=(8, 8), block=(4, 8)):
+    """A minimal interpret-mode pallas_call with injectable index maps."""
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def fn(x):
+        return pl.pallas_call(
+            kernel, grid=grid,
+            in_specs=[pl.BlockSpec(block, in_map)],
+            out_specs=pl.BlockSpec(block, out_map),
+            out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
+            interpret=True)(x)
+    return fn
+
+
+# -- coverage ----------------------------------------------------------
+
+
+class TestCoverageFixtures:
+    def test_oob_input_index_map_fires(self):
+        fn = _fixture_call(in_map=lambda i: (i + 1, 0),
+                           out_map=lambda i: (i, 0))
+        (launch,) = extract_launches(fn, jnp.ones((8, 8)))
+        findings = audit_coverage(launch, target="fx")
+        assert any("outside the padded block grid" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_double_written_output_block_fires(self):
+        # j is the inner grid axis; an out map ignoring i revisits every
+        # block NON-consecutively -> two visit-runs per block
+        fn = _fixture_call(in_map=lambda i, j: (i, 0),
+                           out_map=lambda i, j: (j, 0), grid=(2, 2))
+        (launch,) = extract_launches(fn, jnp.ones((8, 8)))
+        findings = audit_coverage(launch, target="fx")
+        assert any("separate visit-runs" in f.message for f in findings), \
+            _messages(findings)
+
+    def test_never_written_output_block_fires(self):
+        fn = _fixture_call(in_map=lambda i: (i, 0),
+                           out_map=lambda i: (0, 0))
+        (launch,) = extract_launches(fn, jnp.ones((8, 8)))
+        findings = audit_coverage(launch, target="fx")
+        assert any("never written" in f.message for f in findings), \
+            _messages(findings)
+
+    def test_consecutive_revisits_are_one_write(self):
+        # accumulate-then-emit shape: out map ignores the INNER axis, so
+        # revisits collapse to a single visit-run — no finding
+        fn = _fixture_call(in_map=lambda i, s: (i, 0),
+                           out_map=lambda i, s: (i, 0), grid=(2, 3))
+        (launch,) = extract_launches(fn, jnp.ones((8, 8)))
+        assert audit_coverage(launch, target="fx") == []
+
+    def test_real_kernels_covered(self):
+        for fam in registry.model_families():
+            blocks = registry.choose_blocks(48, 96, 160, op=fam)
+            for rec in probe_footprints(fam, blocks):
+                findings = audit_coverage(rec["launch"], target=fam)
+                assert findings == [], _messages(findings)
+
+
+# -- vmem --------------------------------------------------------------
+
+
+class TestVmemFixtures:
+    def test_optimistic_model_fires(self):
+        findings = audit_family_vmem(
+            "cws", blocks_list=[(8, 128, 128)], model=lambda *b: 10)
+        assert any("optimistic model overbooks VMEM" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_budget_violation_fires(self):
+        findings = audit_family_vmem(
+            "cws", blocks_list=[(8, 128, 128)], budget=1000)
+        assert any("exceeds the 1000 B budget" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_stale_model_drift_fires(self):
+        findings = audit_family_vmem(
+            "cws", blocks_list=[(8, 128, 128)],
+            model=lambda b1, b2, bd: 10 ** 9)
+        assert any("drift forbids legal block choices" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_unprobed_family_fires(self):
+        findings = audit_family_vmem("no_such_family")
+        assert any("no registered LaunchProbe" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_all_family_models_pass(self):
+        stats = {}
+        for fam in registry.model_families():
+            findings = audit_family_vmem(fam, stats=stats)
+            assert findings == [], _messages(findings)
+
+    def test_models_pinned_exact_on_worst_member(self):
+        # The regression pin for the PR 6 packed families (and everyone
+        # else): _VMEM_MODELS equals the worst member's declared
+        # BlockSpec+scratch footprint EXACTLY at every audited block
+        # choice.  A model edit or a kernel scratch change that breaks
+        # this must also update the other side.
+        stats = {}
+        for fam in registry.model_families():
+            audit_family_vmem(fam, stats=stats)
+            assert stats[fam]["max_model_over_actual"] == 1.0, (fam, stats)
+
+
+# -- donation ----------------------------------------------------------
+
+
+class TestDonationFixtures:
+    def test_donated_and_returned_fires(self):
+        findings = audit_donation(
+            lambda x: jnp.reshape(x, (-1,)), (jnp.ones((4, 4)),),
+            donate_argnums=(0,), name="fx")
+        assert any("aliases donated input" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_donated_caller_live_buffer_fires(self):
+        # the PR 4 shape: a statically-zero jnp.pad passes the caller's
+        # live x straight through to a donating jit
+        inner = jax.jit(lambda b: b * 2.0, donate_argnums=(0,))
+
+        def caller(x):
+            y = jnp.pad(x, ((0, 0), (0, 0)))
+            return inner(y), x.sum()
+
+        findings = audit_donation(caller, (jnp.ones((4, 4)),), name="fx")
+        assert any("other live uses" in f.message or
+                   "aliases a caller buffer" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_donated_and_returned_by_caller_fires(self):
+        inner = jax.jit(lambda b: b * 2.0, donate_argnums=(0,))
+
+        def caller(x):
+            y = x * 3.0
+            return y, inner(y)
+
+        findings = audit_donation(caller, (jnp.ones((4, 4)),), name="fx")
+        assert any("caller also RETURNS" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_donated_closure_constant_fires(self):
+        inner = jax.jit(lambda b: b * 2.0, donate_argnums=(0,))
+        w = jnp.ones((4, 4))
+
+        def caller(x):
+            return inner(w) + x
+
+        findings = audit_donation(caller, (jnp.ones((4, 4)),), name="fx")
+        assert any("closure constant" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_copy_breaks_the_alias_chain(self):
+        findings = audit_donation(
+            lambda x: jnp.copy(x), (jnp.ones((4, 4)),),
+            donate_argnums=(0,), name="fx")
+        assert findings == [], _messages(findings)
+
+    def test_nonzero_pad_is_fresh_memory(self):
+        inner = jax.jit(lambda b: b * 2.0, donate_argnums=(0,))
+
+        def caller(x):
+            y = jnp.pad(x, ((0, 1), (0, 0)))   # real pad: new buffer
+            return inner(y), x.sum()
+
+        findings = audit_donation(caller, (jnp.ones((4, 4)),), name="fx")
+        assert findings == [], _messages(findings)
+
+
+# -- collectives -------------------------------------------------------
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]), ("data",))
+
+
+class TestCollectiveFixtures:
+    def test_unbound_axis_name_fires(self):
+        f = shard_map(lambda x: jax.lax.psum(x, "model"), mesh=_mesh1(),
+                      in_specs=P("data"), out_specs=P("data"),
+                      check_rep=False)
+        findings = audit_collectives(f, (jnp.ones((4,)),), name="fx")
+        assert any("unbound axis name" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_non_permutation_ppermute_fires(self):
+        f = shard_map(
+            lambda x: jax.lax.ppermute(x, "data", [(0, 0), (1, 0)]),
+            mesh=_mesh1(), in_specs=P("data"), out_specs=P("data"),
+            check_rep=False)
+        findings = audit_collectives(f, (jnp.ones((4,)),), name="fx")
+        assert any("not a true permutation" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_check_permutation_rules(self):
+        assert check_permutation([(0, 1), (1, 0)], 2) == []
+        assert any("duplicate destinations" in e
+                   for e in check_permutation([(0, 0), (1, 0)], 2))
+        assert any("cannot send twice" in e
+                   for e in check_permutation([(0, 0), (0, 1)], 2))
+        assert any("outside the axis size" in e
+                   for e in check_permutation([(0, 3)], 2))
+        assert any("unmatched shards" in e
+                   for e in check_permutation([(0, 1)], 2))
+
+    def test_double_reduction_fires(self):
+        f = shard_map(
+            lambda x: jax.lax.psum(jax.lax.psum(x, "data"), "data"),
+            mesh=_mesh1(), in_specs=P("data"), out_specs=P(),
+            check_rep=False)
+        findings = audit_collectives(f, (jnp.ones((4,)),), name="fx")
+        assert any("reduced twice" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_blessed_point_count_fires(self):
+        f = shard_map(lambda x: jax.lax.psum(x, "data"), mesh=_mesh1(),
+                      in_specs=P("data"), out_specs=P(), check_rep=False)
+        findings = audit_collectives(f, (jnp.ones((4,)),), name="fx",
+                                     expected_psums=3)
+        assert any("expected exactly 3 psum(s)" in f.message
+                   for f in findings), _messages(findings)
+
+
+# -- completeness ------------------------------------------------------
+
+
+class TestCompletenessFixtures:
+    def test_partial_op_family_fires(self):
+        try:
+            @registry.register("lint_demo_op", "pallas", requires=("tpu",))
+            def _demo(x, *, bn):
+                return x
+
+            findings = audit_completeness(["lint_demo_op"])
+            msgs = _messages(findings)
+            assert "missing ['pallas-interpret', 'reference']" in msgs
+            assert "no _VMEM_MODELS entry" in msgs
+        finally:
+            registry._REGISTRY.pop("lint_demo_op", None)
+
+    def test_signature_drift_fires(self):
+        try:
+            @registry.register("lint_demo_op", "pallas-interpret")
+            def _demo(x, *, bn):
+                return x
+
+            @registry.register("lint_demo_op", "reference")
+            def _demo_ref(x, *, bk):        # drifted kwarg name
+                return x
+
+            findings = audit_completeness(["lint_demo_op"])
+            assert any("disagree on signatures" in f.message
+                       for f in findings), _messages(findings)
+        finally:
+            registry._REGISTRY.pop("lint_demo_op", None)
+
+    def test_real_registry_complete(self):
+        findings = audit_completeness()
+        assert findings == [], _messages(findings)
+
+
+# -- compile_guard -----------------------------------------------------
+
+
+class TestCompileGuard:
+    def test_single_compile_passes(self):
+        f = jax.jit(lambda x: x * 2)
+        with compile_guard() as g:
+            g.watch(f)
+            f(jnp.ones(3))
+            f(jnp.ones(3) + 1)       # same shape: no retrace
+
+    def test_retrace_fails(self):
+        f = jax.jit(lambda x: x * 2)
+        with pytest.raises(AssertionError, match="re-traced"):
+            with compile_guard() as g:
+                g.watch(f)
+                f(jnp.ones(3))
+                f(jnp.ones(4))       # new shape: second compile
+
+    def test_expect_overrides(self):
+        f = jax.jit(lambda x: x * 2)
+        with compile_guard() as g:
+            g.watch(f, expect=2)
+            f(jnp.ones(3))
+            f(jnp.ones(4))
+
+    def test_non_jitted_rejected(self):
+        with compile_guard() as g:
+            with pytest.raises(TypeError, match="_cache_size"):
+                g.watch(lambda x: x)
+
+    def test_inner_exception_propagates_unjudged(self):
+        f = jax.jit(lambda x: x * 2)
+        with pytest.raises(ValueError, match="boom"):
+            with compile_guard() as g:
+                g.watch(f, expect=99)    # would fail verify — must not mask
+                raise ValueError("boom")
+
+
+# -- the real registry, end to end -------------------------------------
+
+
+class TestSuiteGreen:
+    def test_full_suite_has_no_failures(self):
+        report = run_suite()
+        assert not report.failures, report.to_text()
+
+    def test_matrix_covers_every_family_and_site(self):
+        report = run_suite()
+        for fam in registry.model_families():
+            assert report.matrix[fam]["vmem"] == "pass"
+            assert report.matrix[fam]["coverage"] == "pass"
+        for site in registry.donation_sites():
+            assert report.matrix[site.name]["donation"] == "pass"
+        for site in registry.collective_sites():
+            assert report.matrix[site.name]["collectives"] == "pass"
+
+    def test_launch_extraction_structure(self):
+        # structural sanity on a real kernel: grid, operands, scratch
+        fam_blocks = (8, 128, 128)
+        (rec,) = [r for r in probe_footprints("cws_rng", fam_blocks)
+                  if r["op"] == "cws_hash_rng"]
+        launch = rec["launch"]
+        assert len(launch.grid) == 3
+        assert len(launch.outputs) == 2          # i*, t*
+        assert len(launch.scratch) == 6          # 3 param + 3 accum tiles
+        smem = [o for o in launch.inputs if o.memory_space == "smem"]
+        assert len(smem) == 1                    # the regen key words

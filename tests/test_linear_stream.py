@@ -16,6 +16,7 @@ from repro.core.linear_model import (LinearParams, TrainCfg, bag_logits,
                                      fit_linear, hashed_logits, init_bag,
                                      init_hashed, linear_accuracy,
                                      validate_bag_features)
+from repro.analysis import compile_guard
 from repro.data.synthetic import make_template_classification
 from repro.pipeline import FeaturePipeline, FeatureSpec
 from repro.training import fit_linear_streamed, streamed_accuracy
@@ -242,11 +243,12 @@ class TestRaggedStreaming:
     def test_single_compile_for_ragged_tail(self):
         pipe = self._pipe(row_chunk=8)
         x = rand_nonneg(jax.random.PRNGKey(4), (27, 18))   # 8+8+8+3 rows
-        feats = pipe.features(x)
-        assert feats.shape == (27, 10)
-        # the donating chunk fn compiled EXACTLY once: the ragged tail is
+        # the donating chunk fn compiles EXACTLY once: the ragged tail is
         # padded to row_chunk, not traced as a second shape
-        assert pipe._chunk_fn()._cache_size() == 1
+        with compile_guard() as g:
+            g.watch(pipe._chunk_fn(), label="chunk_fn")
+            feats = pipe.features(x)
+        assert feats.shape == (27, 10)
 
     def test_padded_tail_matches_unchunked(self):
         pipe = self._pipe(row_chunk=8)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import compile_guard
 from repro.core import hashing
 from repro.core.cws import make_cws_params
 from repro.core.linear_model import (TrainCfg, bag_logits, bag_logits_packed,
@@ -150,11 +151,18 @@ class TestPackedPipeline:
                                 row_chunk=4096).features(x)
         assert (streamed == whole).all()
 
-    def test_single_compiled_chunk_shape(self, packed_pipes):
-        pp, _, d, _ = packed_pipes
+    def test_single_compiled_chunk_shape(self):
+        # fresh pipe: the guard counts NEW cache entries, so watch a
+        # cold chunk fn rather than the module-scoped, pre-warmed one
+        d, k = 40, 50
+        pp = FeaturePipeline.create(
+            jax.random.PRNGKey(11), d,
+            FeatureSpec(num_hashes=k, b_i=3, b_t=1, packed=True),
+            row_chunk=64)
         x = rand_nonneg(jax.random.PRNGKey(2), (150, d))   # ragged tail
-        list(pp.feature_chunks(x))
-        assert pp._chunk_fn()._cache_size() == 1
+        with compile_guard() as g:
+            g.watch(pp._chunk_fn(), label="packed chunk_fn")
+            list(pp.feature_chunks(x))
 
     def test_empty_batch(self, packed_pipes):
         pp, _, d, _ = packed_pipes
@@ -258,8 +266,10 @@ class TestPackedSharded:
             jax.random.PRNGKey(1), d,
             FeatureSpec(k, b_i=4, packed=True), row_chunk=32)
         x = rand_nonneg(jax.random.PRNGKey(2), (100, d))
-        assert (pipe.features(x, mesh=mesh) == pipe.features(x)).all()
-        assert pipe._sharded_chunk_fn(mesh)._cache_size() == 1
+        with compile_guard() as g:
+            g.watch(pipe._sharded_chunk_fn(mesh), label="sharded chunk_fn")
+            sharded = pipe.features(x, mesh=mesh)
+        assert (sharded == pipe.features(x)).all()
 
     @multi_device
     def test_sharded_streamed_training_parity(self):

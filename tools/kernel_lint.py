@@ -1,0 +1,60 @@
+"""Kernel-contract lint CLI (repro.analysis front end).
+
+Runs the five-check static-analysis suite over the registry and emits a
+human-readable matrix, optionally a machine-readable JSON report:
+
+    python -m tools.kernel_lint --all --strict
+    python -m tools.kernel_lint --families cws,cws_packed
+    python -m tools.kernel_lint --all --json benchmarks/results/BENCH_kernel_lint.json
+
+``--strict`` exits 1 on any error-severity finding (the CI gate: a new
+op family missing impls, a VMEM model off by >10%, an index map out of
+bounds, a donation alias, an unbound collective axis).  ``--exhaustive``
+audits every block_candidates entry instead of table + heuristic +
+corner candidates.  The device count is whatever the host exposes — CI
+runs both 1-dev and XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="kernel_lint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--all", action="store_true",
+                    help="audit every registered model family (default "
+                         "when --families is not given)")
+    ap.add_argument("--families", default="",
+                    help="comma-separated model families to audit")
+    ap.add_argument("--checks", default="",
+                    help="comma-separated subset of checks to run")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any error-severity finding")
+    ap.add_argument("--exhaustive", action="store_true",
+                    help="audit every block_candidates entry, not just "
+                         "table/heuristic/corners")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the machine-readable report to PATH")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import CHECKS, run_suite
+
+    families = [f for f in args.families.split(",") if f] or None
+    checks = tuple(c for c in args.checks.split(",") if c) or CHECKS
+    report = run_suite(families, checks=checks,
+                       exhaustive=args.exhaustive)
+
+    print(report.to_text())
+    if args.json:
+        report.save(args.json)
+        print(f"report written to {args.json}")
+    if args.strict and report.failures:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
