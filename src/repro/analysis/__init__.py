@@ -1,13 +1,18 @@
-"""Kernel-contract static analysis (DESIGN.md §14).
+"""Kernel-contract static analysis (DESIGN.md §14–§15).
 
 Inspects jaxprs and ``pl.pallas_call`` structure — no execution, no
 compilation — and mechanically checks the contracts every shipped bug so
 far violated implicitly: VMEM models vs. declared BlockSpecs, index-map
 bounds and emit coverage, donation aliasing, collective axis binding,
-and registry completeness.
+registry completeness, and (since PR 9) the numeric invariants: dtype
+flow (no implicit narrowing, pinned dot accumulation, f32 accumulators),
+integer ranges (interval abstract interpretation — shifts in [0,31],
+wrap only where blessed, in-table gathers), and determinism (no
+backend-RNG or unblessed order-sensitive reductions, trio signature
+agreement).
 
     from repro.analysis import run_suite
-    report = run_suite()            # all families, all five checks
+    report = run_suite()            # all families, all eight checks
     assert not report.failures, report.to_text()
 
 ``tools/kernel_lint.py`` is the CLI; ``compile_guard`` is the reusable
@@ -18,17 +23,23 @@ from .collectives import audit_collectives, check_permutation
 from .completeness import audit_completeness
 from .coverage import audit_coverage
 from .donation import audit_donation, alias_roots
+from .dtype_flow import audit_dtype_flow, scratch_findings
+from .intervals import IVal, audit_intervals, unknown_ival
 from .launches import OperandInfo, PallasLaunch, extract_launches
-from .report import CHECKS, Finding, Report
-from .suite import register_builtin_sites, run_suite
+from .numerics import audit_determinism, audit_trio_signatures
+from .report import CHECKS, SCHEMA_VERSION, Finding, Report
+from .suite import NUMERICS_CHECKS, register_builtin_sites, run_suite
 from .vmem import audit_family_vmem, audit_vmem, probe_footprints
 
 __all__ = [
-    "CHECKS", "Finding", "Report",
+    "CHECKS", "NUMERICS_CHECKS", "SCHEMA_VERSION", "Finding", "Report",
     "OperandInfo", "PallasLaunch", "extract_launches",
     "audit_vmem", "audit_family_vmem", "probe_footprints",
     "audit_coverage", "audit_donation", "alias_roots",
     "audit_collectives", "check_permutation", "audit_completeness",
+    "audit_dtype_flow", "scratch_findings",
+    "IVal", "unknown_ival", "audit_intervals",
+    "audit_determinism", "audit_trio_signatures",
     "compile_guard", "CompileGuard",
     "run_suite", "register_builtin_sites",
 ]

@@ -1,0 +1,218 @@
+"""Dtype-flow audit: precision contracts over traced jaxprs.
+
+``audit_dtype_flow(fn, args)`` traces ``fn`` (ShapeDtypeStruct args —
+nothing executes) and walks the jaxpr, recursing through pjit / scan /
+while / cond / custom-vjp / pallas kernel bodies, enforcing the
+precision contracts DESIGN.md §15 catalogs:
+
+  * no implicit float narrowing: every ``convert_element_type`` that
+    drops float width must be declared per-site via ``allow_narrow``
+    (e.g. the flash emit's intended float32->bfloat16 store);
+  * every dot whose operands are sub-f32 floats must pin
+    ``preferred_element_type`` to float32 or wider — bf16 inputs with a
+    bf16 accumulator is the classic silent-quality bug;
+  * loop carries (scan/while) holding floats must be float32 or wider —
+    the trainer's microbatch grad accumulator contract;
+  * pallas scratch accumulators holding floats must be float32 or wider
+    — the flash ``m/l/acc`` contract (also exposed standalone as
+    :func:`scratch_findings` so the suite can audit every registered
+    family's probe launches without retracing call sites).
+
+Integer<->float conversion *exactness* is range-dependent and lives in
+the integer-range check (repro.analysis.intervals); this check is pure
+dtype structure.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core as jex_core
+
+from .launches import PallasLaunch
+from .report import Finding
+
+__all__ = ["audit_dtype_flow", "scratch_findings"]
+
+
+def _canon(dt) -> np.dtype:
+    return np.dtype(jax.dtypes.canonicalize_dtype(dt))
+
+
+def _is_float(dt) -> bool:
+    return jax.numpy.issubdtype(jax.dtypes.canonicalize_dtype(dt),
+                                jax.numpy.floating)
+
+
+def _float_width(dt) -> int:
+    """Bit width of a float dtype (bfloat16 canonicalizes to itemsize 2)."""
+    return _canon(dt).itemsize * 8
+
+
+class _Flow:
+    def __init__(self, *, name: str, allow_narrow: Tuple[str, ...] = ()):
+        self.name = name
+        self.allow_narrow = tuple(allow_narrow)
+        self.findings: List[Finding] = []
+        self._seen_msgs = set()
+        self._seen_jaxprs = set()
+
+    def emit(self, message: str, **details) -> None:
+        if message in self._seen_msgs:
+            return
+        self._seen_msgs.add(message)
+        self.findings.append(Finding(
+            check="dtype_flow", target=self.name, message=message,
+            details=details))
+
+    # ------------------------------------------------------------------
+
+    def walk(self, jaxpr) -> None:
+        if id(jaxpr) in self._seen_jaxprs:
+            return
+        self._seen_jaxprs.add(id(jaxpr))
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name == "convert_element_type":
+                self._check_convert(eqn)
+            elif name == "dot_general":
+                self._check_dot(eqn)
+            elif name == "scan":
+                self._check_scan_carries(eqn)
+            elif name == "while":
+                self._check_while_carries(eqn)
+            elif name == "pallas_call":
+                self._check_pallas_scratch(eqn)
+            self._recurse(eqn)
+
+    def _recurse(self, eqn) -> None:
+        for val in eqn.params.values():
+            for sub in _jaxprs_in(val):
+                self.walk(sub)
+
+    # ------------------------------------------------------------------
+
+    def _check_convert(self, eqn) -> None:
+        src = eqn.invars[0].aval.dtype
+        dst = eqn.params["new_dtype"]
+        if not (_is_float(src) and _is_float(dst)):
+            return
+        if _float_width(dst) >= _float_width(src):
+            return
+        label = f"{_canon(src).name}->{_canon(dst).name}"
+        if label in self.allow_narrow:
+            return
+        self.emit(
+            f"implicit float narrowing {label}: a "
+            f"{_float_width(src)}-bit value is stored at "
+            f"{_float_width(dst)} bits — if this narrowing is the "
+            f"intended output precision, declare "
+            f"allow_narrow=({label!r},) on the site; otherwise keep the "
+            f"value at {_canon(src).name}",
+            src=_canon(src).name, dst=_canon(dst).name)
+
+    def _check_dot(self, eqn) -> None:
+        lhs = eqn.invars[0].aval.dtype
+        rhs = eqn.invars[1].aval.dtype
+        sub32 = [d for d in (lhs, rhs)
+                 if _is_float(d) and _float_width(d) < 32]
+        if not sub32:
+            return
+        pet = eqn.params.get("preferred_element_type")
+        ok = (pet is not None and _is_float(pet)
+              and _float_width(pet) >= 32)
+        if not ok:
+            self.emit(
+                f"dot_general on {_canon(lhs).name}x{_canon(rhs).name} "
+                f"without preferred_element_type>=float32 — the MXU "
+                f"accumulates at the output dtype, so sub-f32 inputs "
+                f"need preferred_element_type=jnp.float32 pinned "
+                f"(flash _block_update style)",
+                lhs=_canon(lhs).name, rhs=_canon(rhs).name,
+                preferred=str(pet))
+
+    def _carry_findings(self, avals, what: str) -> None:
+        for i, aval in enumerate(avals):
+            dt = getattr(aval, "dtype", None)
+            if dt is None or not _is_float(dt):
+                continue
+            if _float_width(dt) < 32:
+                self.emit(
+                    f"{what} carry {i} accumulates at "
+                    f"{_canon(dt).name} — loop accumulators compound "
+                    f"rounding every iteration; keep the carry float32 "
+                    f"(microbatch_grads contract) and narrow once at "
+                    f"the end if needed",
+                    carry=i, dtype=_canon(dt).name)
+
+    def _check_scan_carries(self, eqn) -> None:
+        num_carry = eqn.params.get("num_carry", 0)
+        sub = eqn.params.get("jaxpr")
+        if sub is None or not num_carry:
+            return
+        avals = [v.aval for v in sub.jaxpr.outvars[:num_carry]]
+        self._carry_findings(avals, "scan")
+
+    def _check_while_carries(self, eqn) -> None:
+        sub = eqn.params.get("body_jaxpr")
+        if sub is None:
+            return
+        avals = [v.aval for v in sub.jaxpr.outvars]
+        self._carry_findings(avals, "while")
+
+    def _check_pallas_scratch(self, eqn) -> None:
+        gm = eqn.params.get("grid_mapping")
+        n_scratch = getattr(gm, "num_scratch_operands", 0) if gm else 0
+        if not n_scratch:
+            return
+        body = eqn.params["jaxpr"]
+        invars = body.jaxpr.invars if hasattr(body, "jaxpr") else body.invars
+        for v in invars[len(invars) - n_scratch:]:
+            self._scratch_one(getattr(v.aval, "dtype", None),
+                              tuple(getattr(v.aval, "shape", ())))
+
+    def _scratch_one(self, dt, shape) -> None:
+        if dt is None or not _is_float(dt):
+            return
+        if _float_width(dt) < 32:
+            self.emit(
+                f"pallas scratch accumulator {shape} is "
+                f"{_canon(dt).name} — the flash m/l/acc contract "
+                f"requires float32 scratch even under bf16 inputs; "
+                f"declare pltpu.VMEM(shape, jnp.float32) and cast at "
+                f"the final store",
+                dtype=_canon(dt).name, shape=list(shape))
+
+
+def _jaxprs_in(val):
+    if isinstance(val, jex_core.ClosedJaxpr):
+        yield val.jaxpr
+    elif isinstance(val, jex_core.Jaxpr):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for item in val:
+            yield from _jaxprs_in(item)
+
+
+def scratch_findings(launch: PallasLaunch, *, target: str) -> List[Finding]:
+    """The f32-accumulator contract over an already-extracted launch:
+    every float scratch operand must be float32 or wider."""
+    flow = _Flow(name=target)
+    for op in launch.scratch:
+        flow._scratch_one(op.dtype, tuple(op.shape))
+    return flow.findings
+
+
+def audit_dtype_flow(fn, args, *, name: str = "fn",
+                     allow_narrow: Iterable[str] = ()) -> List[Finding]:
+    """Trace ``fn(*args)`` and enforce the dtype-flow contracts.
+
+    ``allow_narrow`` blesses specific float narrowings by label, e.g.
+    ``("float32->bfloat16",)`` for an intended low-precision store.
+    """
+    from .intervals import trace_args
+    closed = jax.make_jaxpr(fn)(*trace_args(args))
+    flow = _Flow(name=name, allow_narrow=tuple(allow_narrow))
+    flow.walk(closed.jaxpr)
+    return flow.findings

@@ -13,10 +13,16 @@ import dataclasses
 import json
 from typing import Dict, List, Tuple
 
-__all__ = ["Finding", "Report", "CHECKS"]
+__all__ = ["Finding", "Report", "CHECKS", "SCHEMA_VERSION"]
 
 CHECKS: Tuple[str, ...] = (
-    "completeness", "vmem", "coverage", "donation", "collectives")
+    "completeness", "vmem", "coverage", "donation", "collectives",
+    "dtype_flow", "int_range", "determinism")
+
+# Bump when the JSON layout or the check vocabulary changes; consumers
+# (CI diffing, benchmarks/results/BENCH_kernel_lint.json) key on it.
+# v2: numerics checks (dtype_flow / int_range / determinism) + this field.
+SCHEMA_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,7 +66,8 @@ class Report:
 
     def to_json(self) -> dict:
         return {
-            "schema": "kernel_lint/v1",
+            "schema": f"kernel_lint/v{SCHEMA_VERSION}",
+            "schema_version": SCHEMA_VERSION,
             "checks": list(CHECKS),
             "matrix": {t: dict(row) for t, row in sorted(self.matrix.items())},
             "stats": self.stats,

@@ -2,13 +2,20 @@
 
 ``run_suite()`` imports every module that self-registers probes and
 analysis sites (kernels/ops, pipeline/featurize, training/linear_trainer,
-kernels/flash_attention), then runs all five checks:
+kernels/flash_attention, plus the core numeric modules), then runs all
+eight checks:
 
   completeness  — registry surface per op (impl trio, model, alias, probe)
   vmem          — _VMEM_MODELS vs declared BlockSpec+scratch footprints
   coverage      — index-map bounds + write-exactly-once per output block
   donation      — donated-and-returned / donated-caller-live (PR 4 rule)
   collectives   — bound axes, true-permutation ppermutes, blessed psums
+  dtype_flow    — no implicit float narrowing, pinned dot accumulation,
+                  f32 loop carries and pallas scratch (DESIGN.md §15)
+  int_range     — interval proofs: shifts in [0,31], wrap only where
+                  blessed, exact int<->float converts, in-table gathers
+  determinism   — no backend-RNG / unblessed float scatters or stray
+                  collectives; trio impls agree on jaxpr signatures
 
 tools/kernel_lint.py is the CLI front end; CI runs it ``--all --strict``
 on 1 and 8 devices so a new op family missing any contract fails the
@@ -24,16 +31,26 @@ from .collectives import audit_collectives
 from .completeness import audit_completeness
 from .coverage import audit_coverage
 from .donation import audit_donation
+from .dtype_flow import audit_dtype_flow, scratch_findings
+from .intervals import audit_intervals
+from .numerics import audit_determinism, audit_trio_signatures
 from .report import CHECKS, Finding, Report
 from .vmem import audit_family_vmem, audit_vmem, probe_footprints
 
-__all__ = ["run_suite", "register_builtin_sites"]
+__all__ = ["run_suite", "register_builtin_sites", "NUMERICS_CHECKS"]
+
+NUMERICS_CHECKS = ("dtype_flow", "int_range", "determinism")
 
 _SITE_MODULES = (
     "repro.kernels.ops",
     "repro.pipeline.featurize",
     "repro.training.linear_trainer",
     "repro.kernels.flash_attention",
+    # core numeric modules self-register interval/dtype sites
+    "repro.core.regen",
+    "repro.core.hashing",
+    "repro.core.linear_model",
+    "repro.kernels.cws_hash",
 )
 
 
@@ -101,5 +118,50 @@ def run_suite(families: Optional[Iterable[str]] = None, *,
                 expected_axes=case.get("expected_axes"))
             rep.extend(found)
             rep.mark(site.name, "collectives", found)
+
+    # --- numerics checks over the registered numerics sites ---------------
+    if any(c in checks for c in NUMERICS_CHECKS):
+        for site in registry.numerics_sites():
+            case = site.build()
+            wanted = tuple(case.get("checks", NUMERICS_CHECKS))
+            if "dtype_flow" in checks and "dtype_flow" in wanted:
+                found = audit_dtype_flow(
+                    case["fn"], case["args"], name=site.name,
+                    allow_narrow=case.get("allow_narrow", ()))
+                rep.extend(found)
+                rep.mark(site.name, "dtype_flow", found)
+            if "int_range" in checks and "int_range" in wanted:
+                found = audit_intervals(
+                    case["fn"], case["args"], name=site.name,
+                    allow_wrap=case.get("allow_wrap", False))
+                rep.extend(found)
+                rep.mark(site.name, "int_range", found)
+            if "determinism" in checks and "determinism" in wanted:
+                found = audit_determinism(
+                    case["fn"], case["args"], name=site.name,
+                    allow=case.get("allow", ()))
+                rep.extend(found)
+                rep.mark(site.name, "determinism", found)
+
+    # dtype_flow additionally audits every family probe's launch scratch
+    # (the f32-accumulator contract) without retracing any call site
+    if "dtype_flow" in checks:
+        for fam in fams:
+            found = []
+            for rec in probe_footprints(fam, _coverage_blocks(fam)):
+                found.extend(scratch_findings(rec["launch"], target=fam))
+            rep.extend(found)
+            rep.mark(fam, "dtype_flow", found)
+
+    # determinism additionally requires every pallas-bearing op's trio to
+    # agree on jaxpr signatures (and to HAVE a trio probe at all)
+    if "determinism" in checks:
+        found = audit_trio_signatures(families)
+        rep.extend(found)
+        for op in registry.registered_ops():
+            if families and registry.family(op) not in fams \
+                    and op not in fams:
+                continue
+            rep.mark(op, "determinism", found)
 
     return rep

@@ -113,7 +113,10 @@ def pack_codes(codes: Array, *, b: int) -> Array:
     cpw = check_packed_bits(b)
     k = codes.shape[-1]
     w = packed_width(k, b)
-    safe = jnp.where(codes < 0, 0, codes).astype(jnp.uint32)
+    # maximum (not where) so the sentinel fold is provably nonnegative
+    # BEFORE the uint32 reinterpretation — identical semantics, and the
+    # int_range analyzer can certify the cast never wraps
+    safe = jnp.maximum(codes, 0).astype(jnp.uint32)
     safe = jnp.bitwise_and(safe, jnp.uint32((1 << b) - 1))
     pad = [(0, 0)] * (codes.ndim - 1) + [(0, w * cpw - k)]
     safe = jnp.pad(safe, pad).reshape(codes.shape[:-1] + (w, cpw))
@@ -130,10 +133,50 @@ def unpack_codes(packed: Array, k: int, *, b: int) -> Array:
             f"packed width mismatch: got {packed.shape[-1]} words but "
             f"k = {k} at b = {b} packs into {packed_width(k, b)}")
     col = jnp.arange(k, dtype=jnp.int32)
-    words = packed[..., col // cpw]
-    shifts = ((col % cpw) * b).astype(jnp.uint32)
+    # lax.div/rem (truncating) instead of // and %: identical for the
+    # nonnegative arange, and they trace to single primitives whose
+    # bounds the interval analyzer proves exactly — jnp's floor-division
+    # sign-correction chain is not provably nonnegative at 2^23 columns
+    word_ix = jax.lax.div(col, jnp.int32(cpw))
+    words = jnp.take(packed, word_ix, axis=-1, mode="clip")
+    shifts = (jax.lax.rem(col, jnp.int32(cpw)) * b).astype(jnp.uint32)
     return jnp.bitwise_and(words >> shifts,
                            jnp.uint32((1 << b) - 1)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# numerics-analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# Interval proofs over the pack/unpack/offset arithmetic at the widest
+# packed width (b = 8) with hostile seeds: codes carry the -1 sentinel,
+# packed words span the full uint32 range.  The shift/or word packing is
+# exactly the b-Bit Minwise truncation contract — any wrap or
+# out-of-range shift here silently corrupts features.
+
+from repro.kernels import registry as _registry  # noqa: E402
+
+
+@_registry.register_numerics_site("hashing.pack_codes")
+def _numerics_site_pack_codes():
+    from repro.analysis.intervals import unknown_ival
+    codes = unknown_ival((6, 9), jnp.int32, lo=-1, hi=255)  # ragged k
+    return {"fn": lambda codes: pack_codes(codes, b=8), "args": (codes,)}
+
+
+@_registry.register_numerics_site("hashing.unpack_codes")
+def _numerics_site_unpack_codes():
+    import jax as _jax
+    packed = _jax.ShapeDtypeStruct((4, 3), jnp.uint32)  # full uint32 range
+    return {"fn": lambda packed: unpack_codes(packed, 9, b=8),
+            "args": (packed,)}
+
+
+@_registry.register_numerics_site("hashing.feature_indices")
+def _numerics_site_feature_indices():
+    from repro.analysis.intervals import unknown_ival
+    codes = unknown_ival((4, 9), jnp.int32, lo=-1, hi=255)
+    return {"fn": lambda codes: feature_indices(codes, b_i=8),
+            "args": (codes,)}
 
 
 def one_hot_features(codes: Array, *, b_i: int, b_t: int = 0) -> Array:

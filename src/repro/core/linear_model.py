@@ -88,9 +88,38 @@ def bag_logits(params: LinearParams, idx: Array) -> Array:
         raise ValueError("bag params must be a flat (F, C) table "
                          f"(init_bag); got w {params.w.shape}")
     num_features = params.w.shape[0]
+    # mode="clip" (a no-op on the already-clamped indices) skips
+    # jnp.take's negative-wraparound add of num_features, which cannot
+    # even trace once the table reaches 2^31 rows (int32 overflow)
     return jnp.take(params.w,
                     idx.astype(jnp.int32).clip(0, num_features - 1),
-                    axis=0).sum(axis=1) + params.b
+                    axis=0, mode="clip").sum(axis=1) + params.b
+
+
+def check_bag_table_size(num_hashes: int, b: int) -> int:
+    """Construction-time int32-overflow guard for packed bag tables.
+
+    Packed gathers rebuild global indices ``j * 2^b + code_j`` in int32
+    (the gather index dtype the TPU path uses), so the last legal index
+    ``(num_hashes - 1) * 2^b + (2^b - 1) = num_hashes * 2^b - 1`` must
+    fit int32.  ``num_hashes * 2^b <= 2^31`` is exact: at b = 8 the
+    boundary is num_hashes = 2^23, whose top index is 2147483647 ==
+    int32 max.  Beyond it the offset arithmetic wraps negative and the
+    clamp silently folds every overflowed hash onto row 0 — found by the
+    int_range analyzer (DESIGN.md §15), pinned here loudly.  Returns the
+    table row count ``num_hashes * 2^b``."""
+    from repro.core.hashing import check_packed_bits
+    check_packed_bits(b)
+    num_features = num_hashes * (1 << b)
+    if num_features > 2 ** 31:
+        raise ValueError(
+            f"packed bag table overflow: {num_hashes} hashes at b = {b} "
+            f"index {num_features} features, but the top index "
+            f"{num_features - 1} exceeds int32 max ({2 ** 31 - 1}) and "
+            f"the j*2^b offset arithmetic would wrap; keep "
+            f"num_hashes * 2^b <= 2^31 (at b = {b}: num_hashes <= "
+            f"{2 ** 31 >> b})")
+    return num_features
 
 
 def bag_logits_packed(params: LinearParams, packed: Array, *,
@@ -121,7 +150,7 @@ def bag_logits_packed(params: LinearParams, packed: Array, *,
         raise ValueError("bag params must be a flat (F, C) table "
                          f"(init_bag); got w {params.w.shape}")
     num_features = params.w.shape[0]
-    if num_features != num_hashes * (1 << b):
+    if num_features != check_bag_table_size(num_hashes, b):
         raise ValueError(
             f"feature-table mismatch: table has {num_features} rows but "
             f"{num_hashes} hashes at b = {b} index {num_hashes * (1 << b)} "
@@ -129,8 +158,10 @@ def bag_logits_packed(params: LinearParams, packed: Array, *,
     codes = unpack_codes(packed, num_hashes, b=b)
     offs = jnp.arange(num_hashes, dtype=jnp.int32) * (1 << b)
     idx = (offs + codes).astype(jnp.int32)
+    # mode="clip" as in bag_logits: at the 2^31-row boundary table the
+    # default negative-wraparound add would overflow int32 at trace time
     return jnp.take(params.w, idx.clip(0, num_features - 1),
-                    axis=0).sum(axis=1) + params.b
+                    axis=0, mode="clip").sum(axis=1) + params.b
 
 
 def init_bag_packed(key: Array, num_hashes: int, b: int,
@@ -138,9 +169,7 @@ def init_bag_packed(key: Array, num_hashes: int, b: int,
     """Flat table sized for packed b-bit features: (num_hashes * 2^b, C).
     The truncated-width twin of ``init_bag`` — at b = 4 the table is
     2^(full-4) x smaller than the untruncated space."""
-    from repro.core.hashing import check_packed_bits
-    check_packed_bits(b)
-    return init_bag(key, num_hashes * (1 << b), n_classes)
+    return init_bag(key, check_bag_table_size(num_hashes, b), n_classes)
 
 
 def validate_bag_features(params: LinearParams, num_features: int, *,
@@ -320,6 +349,42 @@ def best_hashed_accuracy_over_C(codes_tr, y_tr, codes_te, y_te, *, n_classes,
         p = fit_linear(p0, codes_tr, y_tr, cfg=cfg, kind="hashed")
         best = max(best, linear_accuracy(p, codes_te, y_te, kind="hashed"))
     return best
+
+
+# ---------------------------------------------------------------------------
+# numerics-analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# Hostile-input interval proofs for the embedding-bag gathers: bag_logits
+# under a FULL-int32 index seed (the clamp must dominate the gather), and
+# the packed offset arithmetic at the exact int32 boundary
+# (num_hashes = 2^23, b = 8: top index 2^31 - 1).  ShapeDtypeStructs
+# only — the 2^31-row table never materializes.
+
+from repro.kernels import registry as _registry  # noqa: E402
+
+
+@_registry.register_numerics_site("linear.bag_logits")
+def _numerics_site_bag_logits():
+    import jax as _jax
+    w = _jax.ShapeDtypeStruct((96, 3), jnp.float32)
+    bias = _jax.ShapeDtypeStruct((3,), jnp.float32)
+    idx = _jax.ShapeDtypeStruct((4, 6), jnp.int32)   # full int32 range
+    return {"fn": lambda w, bias, idx: bag_logits(LinearParams(w, bias),
+                                                  idx),
+            "args": (w, bias, idx)}
+
+
+@_registry.register_numerics_site("linear.bag_logits_packed_boundary")
+def _numerics_site_bag_logits_packed():
+    import jax as _jax
+    k, b = 1 << 23, 8                        # top index == int32 max
+    w = _jax.ShapeDtypeStruct((check_bag_table_size(k, b), 3), jnp.float32)
+    bias = _jax.ShapeDtypeStruct((3,), jnp.float32)
+    from repro.core.hashing import packed_width
+    packed = _jax.ShapeDtypeStruct((2, packed_width(k, b)), jnp.uint32)
+    return {"fn": lambda w, bias, packed: bag_logits_packed(
+                LinearParams(w, bias), packed, num_hashes=k, b=b),
+            "args": (w, bias, packed)}
 
 
 def best_bag_accuracy_over_C(idx_tr, y_tr, idx_te, y_te, *, n_classes,

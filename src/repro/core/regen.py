@@ -119,6 +119,27 @@ def regen_tile(k0: Array, k1: Array, d0, kh0, bd: int, bk: int):
     return r, log_c, beta
 
 
+# ---------------------------------------------------------------------------
+# numerics-analysis site (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# The one blessed-wraparound site: threefry's add/xor/rotate arithmetic is
+# modular by design, so the interval audit runs with allow_wrap=True —
+# which still enforces shift amounts in [0, 31], the exactness of the
+# (bits >> 8) -> fp32 uniform conversion (2^24 mantissa contract), and
+# gather bounds; only the intended mod-2^32 adds are waived.
+
+from repro.kernels import registry as _registry  # noqa: E402
+
+
+@_registry.register_numerics_site("regen.threefry_tile")
+def _numerics_site_regen_tile():
+    from repro.analysis.intervals import unknown_ival
+    k0 = unknown_ival((), jnp.uint32)
+    k1 = unknown_ival((), jnp.uint32)
+    return {"fn": lambda k0, k1: regen_tile(k0, k1, 0, 0, 8, 16),
+            "args": (k0, k1), "allow_wrap": True}
+
+
 def regen_params(key: Array, dim: int, num_hashes: int):
     """Materialize the full (dim, num_hashes) parameter matrices of the
     counter stream — the oracle/reference form (CWSParams), bit-identical

@@ -569,3 +569,39 @@ def cws_encode_rng_packed_pallas(x: jax.Array, key: jax.Array,
         interpret=interpret,
     )(xp, kw)
     return words[:n, :packed_width(num_hashes, b)]
+
+
+# ---------------------------------------------------------------------------
+# numerics-analysis sites (repro.analysis / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# Interval proofs over the emit arithmetic the kernels share: the b-bit
+# code build (mask / clip / sentinel fold), the per-hash offset, and the
+# shift/or word packing — seeded with the hostile ranges the accumulator
+# actually produces (best_i carries the -1 sentinel, best_t is an
+# unbounded float before its clip).
+
+from repro.kernels import registry as _registry  # noqa: E402
+
+
+@_registry.register_numerics_site("kernels.pack_words")
+def _numerics_site_pack_words():
+    from repro.analysis.intervals import unknown_ival
+    code = unknown_ival((8, 32), jnp.int32, lo=0, hi=255)
+    return {"fn": lambda code: _pack_words(code, 8), "args": (code,)}
+
+
+@_registry.register_numerics_site("kernels.encode_emit")
+def _numerics_site_encode_emit():
+    from repro.analysis.intervals import unknown_ival
+    # best_i: NEG_SENTINEL or a global dim index (up to 2^20-dim data);
+    # best_t: any finite float (clipped inside); hash_block: grid id.
+    i = unknown_ival((8, 32), jnp.int32, lo=NEG_SENTINEL, hi=2 ** 20 - 1)
+    t = unknown_ival((8, 32), jnp.float32)
+    hb = unknown_ival((), jnp.int32, lo=0, hi=2 ** 11 - 1)
+
+    def fn(i, t, hb):
+        unpacked = _encode_emit(i, t, hb, 32, 4, 4)
+        packed = _encode_emit(i, t, hb, 32, 4, 4, packed=True,
+                              num_hashes=1000)
+        return unpacked, packed
+    return {"fn": fn, "args": (i, t, hb)}

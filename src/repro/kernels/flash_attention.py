@@ -610,6 +610,23 @@ def _analysis_attn_mesh():
     return Mesh(devs.reshape(1, -1), ("data", "model"))
 
 
+@registry.register_numerics_site("flash.accumulators")
+def _numerics_site_flash_accumulators():
+    # The accumulation contract under bf16 inputs: m/l/acc scratch stays
+    # float32, both dots pin preferred_element_type=f32, and the ONLY
+    # narrowing is the final intended f32 -> bf16 store (blessed here so
+    # any other downcast that sneaks into the kernel still fails).
+    q = jax.ShapeDtypeStruct((1, 64, 2, 16), jnp.bfloat16)
+    kv = jax.ShapeDtypeStruct((1, 64, 2, 16), jnp.bfloat16)
+
+    def fn(q, k, v):
+        return flash_attention_fwd(q, k, v, window=0, blk_q=32, blk_k=32,
+                                   interpret=True)
+    return {"fn": fn, "args": (q, kv, kv),
+            "allow_narrow": ("float32->bfloat16",),
+            "checks": ("dtype_flow", "determinism")}
+
+
 @registry.register_collective_site("attention.flash_allgather")
 def _collective_site_allgather():
     mesh = _analysis_attn_mesh()

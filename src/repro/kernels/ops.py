@@ -485,3 +485,75 @@ def _probe_min_sum(b1, b2, bd):
     def fn(x, y):
         return min_sum_pallas(x, y, bm=b1, bn=b2, bd=bd, interpret=True)
     return fn, (_probe_sds((m, d)), _probe_sds((n2, d))), (b1, b2, bd)
+
+
+# ---------------------------------------------------------------------------
+# trio-signature probes (repro.analysis.numerics / tools/kernel_lint.py)
+# ---------------------------------------------------------------------------
+# One TrioProbe per op: shared ShapeDtypeStruct args every registered impl
+# must accept, with output shape/dtype trees required to agree exactly
+# under jax.eval_shape (the signature-level half of the bit-identical
+# trio guarantee; value parity lives in the equivalence tests).  Shapes
+# are small and ragged against the pinned blocks so the padded pallas
+# paths and the chunked references all exercise their tails.
+
+_TRIO_X = _probe_sds((19, 23))
+_TRIO_P = _probe_sds((23, 17))
+_TRIO_KW = dict(bn=8, bk=8, bd=16)
+_TRIO_KEY = jax.random.PRNGKey(0)
+
+
+@registry.register_trio("cws_hash")
+def _trio_cws_hash():
+    return (_TRIO_X, CWSParams(_TRIO_P, _TRIO_P, _TRIO_P)), dict(_TRIO_KW)
+
+
+@registry.register_trio("cws_encode")
+def _trio_cws_encode():
+    return ((_TRIO_X, CWSParams(_TRIO_P, _TRIO_P, _TRIO_P)),
+            dict(b_i=2, b_t=2, **_TRIO_KW))
+
+
+@registry.register_trio("cws_hash_rng")
+def _trio_cws_hash_rng():
+    return (_TRIO_X, _TRIO_KEY), dict(num_hashes=17, **_TRIO_KW)
+
+
+@registry.register_trio("cws_encode_rng")
+def _trio_cws_encode_rng():
+    return (_TRIO_X, _TRIO_KEY), dict(num_hashes=17, b_i=2, b_t=2,
+                                      **_TRIO_KW)
+
+
+@registry.register_trio("cws_encode_packed")
+def _trio_cws_encode_packed():
+    return ((_TRIO_X, CWSParams(_TRIO_P, _TRIO_P, _TRIO_P)),
+            dict(b_i=4, b_t=4, **_TRIO_KW))
+
+
+@registry.register_trio("cws_encode_rng_packed")
+def _trio_cws_encode_rng_packed():
+    return (_TRIO_X, _TRIO_KEY), dict(num_hashes=17, b_i=4, b_t=4,
+                                      **_TRIO_KW)
+
+
+@registry.register_trio("minmax_gram")
+def _trio_minmax_gram():
+    return (_probe_sds((19, 23)), _probe_sds((13, 23))), dict(bm=8, bn=8,
+                                                              bd=16)
+
+
+@registry.register_trio("min_sum")
+def _trio_min_sum():
+    return (_probe_sds((19, 23)), _probe_sds((13, 23))), dict(bm=8, bn=8,
+                                                              bd=16)
+
+
+@registry.register_trio("attention", impls=("reference", "flash"))
+def _trio_attention():
+    # the mesh-bearing schedules (flash_allgather / flash_ring) carry
+    # their own collective-site contracts; signature parity here covers
+    # the mesh-free pair every schedule reduces to
+    q = _probe_sds((2, 16, 4, 8))
+    kv = _probe_sds((2, 16, 2, 8))
+    return (q, kv, kv), dict(window=0, block=8)

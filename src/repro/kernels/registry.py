@@ -44,6 +44,8 @@ __all__ = [
     "has_vmem_model", "LaunchProbe", "register_probe", "family_probes",
     "probe_families", "force_donation", "register_donation_site",
     "donation_sites", "register_collective_site", "collective_sites",
+    "register_numerics_site", "numerics_sites",
+    "TrioProbe", "register_trio", "trio_probes",
 ]
 
 
@@ -416,3 +418,53 @@ def register_collective_site(name: str):
 
 def collective_sites() -> Tuple[AnalysisSite, ...]:
     return tuple(_COLLECTIVE_SITES[k] for k in sorted(_COLLECTIVE_SITES))
+
+
+_NUMERICS_SITES: Dict[str, AnalysisSite] = {}
+
+
+def register_numerics_site(name: str):
+    """Decorator: register a numerics-audit site.  ``build()`` returns a
+    dict with ``fn`` and ``args`` (ShapeDtypeStructs, concrete arrays, or
+    analysis.intervals.IVal range seeds) plus optional knobs:
+    ``allow_wrap`` (modular integer arithmetic is intended — threefry),
+    ``allow_narrow`` (blessed float narrowings, e.g.
+    ``("float32->bfloat16",)``), ``allow`` (blessed determinism prims,
+    e.g. ``("scatter-add",)``), and ``checks`` (subset of the numerics
+    checks to run; default all three)."""
+    def deco(build: Callable) -> Callable:
+        _NUMERICS_SITES[name] = AnalysisSite(name=name, build=build)
+        return build
+    return deco
+
+
+def numerics_sites() -> Tuple[AnalysisSite, ...]:
+    return tuple(_NUMERICS_SITES[k] for k in sorted(_NUMERICS_SITES))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrioProbe:
+    """A recipe for signature-checking one op's impl trio: ``build()``
+    returns ``(args, kwargs)`` such that every impl in ``impls`` accepts
+    ``impl.fn(*args, **kwargs)`` under jax.eval_shape (args may be
+    ShapeDtypeStructs — nothing executes).  The determinism check
+    requires the resulting output shape/dtype trees to agree exactly."""
+    op: str
+    impls: Tuple[str, ...]
+    build: Callable[[], tuple]
+
+
+_TRIO_PROBES: Dict[str, TrioProbe] = {}
+
+
+def register_trio(op: str, *, impls: Tuple[str, ...] = (
+        "pallas", "pallas-interpret", "reference")):
+    """Decorator: register a trio-signature probe for ``op``."""
+    def deco(build: Callable) -> Callable:
+        _TRIO_PROBES[op] = TrioProbe(op=op, impls=tuple(impls), build=build)
+        return build
+    return deco
+
+
+def trio_probes() -> Tuple[TrioProbe, ...]:
+    return tuple(_TRIO_PROBES[k] for k in sorted(_TRIO_PROBES))

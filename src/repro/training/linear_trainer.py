@@ -729,6 +729,23 @@ def _donation_site_update_step():
             "donate_argnums": (0, 1)}
 
 
+@registry.register_numerics_site("trainer.grad_accum")
+def _numerics_site_grad_accum():
+    # n_micro=2 so the microbatch gradient accumulator appears as a real
+    # scan carry — the dtype-flow check pins it to float32.  The
+    # embedding-bag backward is a float scatter-add; XLA's deterministic
+    # scatter lowering is a recorded dependency, blessed here by name.
+    pipe, cfg, tx, params = _analysis_setup()
+    step = _make_update_step(cfg, tx, 2, _bag_logits_fn(pipe))
+    state = tx.init(params)
+    fb = jax.ShapeDtypeStruct((cfg.batch_size, pipe.spec.num_hashes),
+                              jnp.int32)
+    yb = jax.ShapeDtypeStruct((cfg.batch_size,), jnp.int32)
+    i = jnp.zeros((), jnp.int32)
+    return {"fn": lambda *a: step(*a), "args": (params, state, fb, yb, i),
+            "allow": ("scatter-add",)}
+
+
 @registry.register_collective_site("trainer.sharded_update")
 def _collective_site_sharded_update():
     from repro.launch.mesh import make_data_mesh

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import compile_guard
 from repro.checkpoint import (Checkpointer, committed_steps, gc_incomplete,
                               latest_step, save_checkpoint)
 from repro.core.linear_model import TrainCfg, init_bag
@@ -133,6 +134,29 @@ class TestKillResume:
                                cfg=cfg, ckpt_every=5)
         # the resumed leg committed through the end of the run
         assert latest_step(tmp_path) == cfg.steps
+
+    def test_kill_resume_single_chunk_compile(self, problem, tmp_path):
+        """The interrupted leg AND the resumed leg drive ONE chunk-fn
+        compile (analysis.compile_guard, replacing the old ad-hoc
+        ``_cache_size() == 1`` asserts): resume re-enters the same
+        donated (batch_size, dim) launch shape, so surviving a kill
+        costs zero retraces.  A fresh pipe keeps the guard's baseline
+        clean of the module-scoped fixture's warm cache."""
+        ds, _, cfg, _ = problem
+        spec = FeatureSpec(num_hashes=24, b_i=4)
+        pipe = FeaturePipeline.create(jax.random.PRNGKey(11), 32, spec,
+                                      row_chunk=32)
+        p0 = init_bag(jax.random.PRNGKey(2), pipe.num_features, 3)
+        ck = Checkpointer(tmp_path)
+        with compile_guard() as g:
+            g.watch(pipe._chunk_fn(), label="chunk_fn")
+            with pytest.raises(ChaosKill):
+                fit_linear_streamed(p0, pipe, ds.x_train, ds.y_train,
+                                    cfg=cfg, ckpt=ck, ckpt_every=5,
+                                    chaos=ChaosPlan(kill_at(17)))
+            drain(ck)
+            resume_linear_streamed(tmp_path, pipe, ds.x_train,
+                                   ds.y_train, cfg=cfg)
 
     def test_mismatch_guards(self, problem, tmp_path):
         """Resuming against the wrong pipeline/config/dataset/key must

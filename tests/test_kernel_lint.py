@@ -13,10 +13,12 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.analysis import (audit_collectives, audit_completeness,
-                            audit_coverage, audit_donation,
-                            audit_family_vmem, check_permutation,
+                            audit_coverage, audit_determinism,
+                            audit_donation, audit_dtype_flow,
+                            audit_family_vmem, audit_intervals,
+                            audit_trio_signatures, check_permutation,
                             compile_guard, extract_launches,
-                            probe_footprints, run_suite)
+                            probe_footprints, run_suite, unknown_ival)
 from repro.kernels import ops, registry  # noqa: F401  (probe registration)
 
 
@@ -327,6 +329,222 @@ class TestCompileGuard:
                 raise ValueError("boom")
 
 
+# -- numerics: dtype_flow ----------------------------------------------
+
+
+class TestDtypeFlowFixtures:
+    def test_implicit_narrowing_fires(self):
+        fn = lambda x: x.astype(jnp.bfloat16)  # noqa: E731
+        x = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        findings = audit_dtype_flow(fn, (x,), name="fx")
+        assert any("float32->bfloat16" in f.message for f in findings), \
+            _messages(findings)
+
+    def test_blessed_narrowing_is_clean(self):
+        fn = lambda x: x.astype(jnp.bfloat16)  # noqa: E731
+        x = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+        assert not audit_dtype_flow(fn, (x,), name="fx",
+                                    allow_narrow=("float32->bfloat16",))
+
+    def test_bf16_dot_without_pinned_accumulator_fires(self):
+        fn = lambda a, b: jnp.dot(a, b)  # noqa: E731
+        a = jax.ShapeDtypeStruct((4, 8), jnp.bfloat16)
+        b = jax.ShapeDtypeStruct((8, 4), jnp.bfloat16)
+        findings = audit_dtype_flow(fn, (a, b), name="fx")
+        assert any("preferred_element_type" in f.message
+                   for f in findings), _messages(findings)
+        # pinning the accumulation to f32 is the fix
+        fixed = lambda a, b: jnp.dot(  # noqa: E731
+            a, b, preferred_element_type=jnp.float32)
+        assert not audit_dtype_flow(fixed, (a, b), name="fx")
+
+    def test_sub_f32_scan_carry_fires(self):
+        def fn(x):
+            def body(c, xi):
+                return (c + xi).astype(jnp.bfloat16), ()
+            c, _ = jax.lax.scan(body, jnp.zeros((), jnp.bfloat16), x)
+            return c
+        x = jax.ShapeDtypeStruct((8,), jnp.bfloat16)
+        findings = audit_dtype_flow(fn, (x,), name="fx",
+                                    allow_narrow=("float32->bfloat16",))
+        assert any("carry" in f.message and "bfloat16" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_sub_f32_pallas_scratch_fires(self):
+        from jax.experimental.pallas import tpu as pltpu
+
+        def kernel(x_ref, o_ref, acc):
+            acc[...] = x_ref[...].astype(jnp.bfloat16)
+            o_ref[...] = acc[...].astype(jnp.float32)
+
+        def fn(x):
+            return pl.pallas_call(
+                kernel, grid=(2,),
+                in_specs=[pl.BlockSpec((4, 8), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((4, 8), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                scratch_shapes=[pltpu.VMEM((4, 8), jnp.bfloat16)],
+                interpret=True)(x)
+        x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+        findings = audit_dtype_flow(fn, (x,), name="fx",
+                                    allow_narrow=("float32->bfloat16",))
+        assert any("scratch" in f.message and "bfloat16" in f.message
+                   for f in findings), _messages(findings)
+
+
+# -- numerics: int_range -----------------------------------------------
+
+
+class TestIntervalFixtures:
+    def test_out_of_range_shift_fires(self):
+        fn = lambda x: x << 35  # noqa: E731
+        x = unknown_ival((4,), jnp.uint32)
+        findings = audit_intervals(fn, (x,), name="fx")
+        assert any("shift" in f.message and "35" in f.message
+                   for f in findings), _messages(findings)
+
+    def test_wrapping_int32_arithmetic_fires(self):
+        fn = lambda a, b: a + b  # noqa: E731
+        a = unknown_ival((4,), jnp.int32)
+        b = unknown_ival((4,), jnp.int32)
+        findings = audit_intervals(fn, (a, b), name="fx")
+        assert any("wrap int32" in f.message for f in findings), \
+            _messages(findings)
+        # threefry-style wraparound is blessed per site, not globally
+        assert not audit_intervals(fn, (a, b), name="fx",
+                                   allow_wrap=True)
+
+    def test_out_of_table_gather_fires(self):
+        fn = lambda t, idx: t[idx]  # noqa: E731
+        t = jax.ShapeDtypeStruct((8,), jnp.float32)
+        idx = unknown_ival((4,), jnp.int32, lo=0, hi=100)
+        findings = audit_intervals(fn, (t, idx), name="fx")
+        assert any("gather" in f.message for f in findings), \
+            _messages(findings)
+        # a provably in-table index is clean
+        ok = unknown_ival((4,), jnp.int32, lo=0, hi=7)
+        assert not audit_intervals(fn, (t, ok), name="fx")
+
+    def test_inexact_int_to_float_fires_exact_constant_does_not(self):
+        fn = lambda x: x.astype(jnp.float32)  # noqa: E731
+        x = unknown_ival((4,), jnp.int32)    # full range > 2^24
+        findings = audit_intervals(fn, (x,), name="fx")
+        assert any("2^24" in f.message for f in findings), \
+            _messages(findings)
+        # a known power-of-two constant round-trips exactly (the
+        # jnp.clip(..., 2^30) pattern in the emit kernel)
+        big = lambda: jnp.int32(1 << 30).astype(jnp.float32)  # noqa: E731
+        assert not audit_intervals(big, (), name="fx")
+
+    def test_interval_proof_of_packed_shift_chain(self):
+        # the real unpack_codes contract, in miniature: lax.div/rem keep
+        # word index and shift amount provably in range at any k
+        from repro.core.hashing import unpack_codes
+        packed = jax.ShapeDtypeStruct((2, 3), jnp.uint32)
+        assert not audit_intervals(
+            lambda p: unpack_codes(p, 9, b=8), (packed,), name="fx")
+
+
+# -- numerics: determinism ---------------------------------------------
+
+
+class TestDeterminismFixtures:
+    def test_float_scatter_add_fires(self):
+        def fn(x, idx):
+            return jnp.zeros((8,), jnp.float32).at[idx].add(x)
+        x = jax.ShapeDtypeStruct((16,), jnp.float32)
+        idx = jax.ShapeDtypeStruct((16,), jnp.int32)
+        findings = audit_determinism(fn, (x, idx), name="fx")
+        assert any("scatter" in f.message for f in findings), \
+            _messages(findings)
+        # per-site blessing (the trainer's grad accumulation) silences it
+        assert not audit_determinism(fn, (x, idx), name="fx",
+                                     allow=("scatter-add",))
+
+    def test_int_scatter_add_is_clean(self):
+        # integer addition is associative: order cannot change the sum
+        def fn(x, idx):
+            return jnp.zeros((8,), jnp.int32).at[idx].add(x)
+        x = jax.ShapeDtypeStruct((16,), jnp.int32)
+        idx = jax.ShapeDtypeStruct((16,), jnp.int32)
+        assert not audit_determinism(fn, (x, idx), name="fx")
+
+    def test_stray_collective_fires(self):
+        mesh = Mesh(np.array(jax.devices()).reshape(1, -1),
+                    ("data", "model"))
+        def fn(x):
+            return shard_map(lambda xs: jax.lax.psum(xs, "model"),
+                             mesh=mesh, in_specs=P(None, "model"),
+                             out_specs=P(None, None))(x)
+        x = jax.ShapeDtypeStruct((4, len(jax.devices())), jnp.float32)
+        findings = audit_determinism(fn, (x,), name="fx")
+        assert any("psum" in f.message for f in findings), \
+            _messages(findings)
+        assert not audit_determinism(fn, (x,), name="fx",
+                                     allow=("psum",))
+
+    def test_dtype_mismatched_trio_fires(self):
+        op = "lint_demo_op"
+        try:
+            registry.register(op, "reference")(
+                lambda x: x.astype(jnp.float32))
+            registry.register(op, "pallas-interpret")(
+                lambda x: x.astype(jnp.bfloat16))   # drifted dtype
+            registry.register_trio(
+                op, impls=("reference", "pallas-interpret"))(
+                lambda: ((jnp.ones((4, 4), jnp.float32),), {}))
+            findings = audit_trio_signatures()
+            mine = [f for f in findings if f.target == op]
+            assert any("disagrees" in f.message for f in mine), \
+                _messages(findings)
+        finally:
+            registry._REGISTRY.pop(op, None)
+            registry._TRIO_PROBES.pop(op, None)
+
+    def test_pallas_op_without_trio_probe_fires(self):
+        op = "lint_demo_unprobed"
+        try:
+            registry.register(op, "pallas", requires=("tpu",))(
+                lambda x: x)
+            registry.register(op, "reference")(lambda x: x)
+            findings = audit_trio_signatures()
+            mine = [f for f in findings if f.target == op]
+            assert any("trio" in f.message for f in mine), \
+                _messages(findings)
+        finally:
+            registry._REGISTRY.pop(op, None)
+
+
+# -- numerics: the packed-table int32 boundary (satellite guard) -------
+
+
+class TestPackedTableBoundary:
+    def test_boundary_table_traces(self):
+        # k * 2^b == 2^31 exactly: the top flat index is int32 max
+        from repro.core.linear_model import (LinearParams,
+                                             bag_logits_packed,
+                                             check_bag_table_size)
+        from repro.core.hashing import packed_width
+        k, b = 1 << 23, 8
+        F = check_bag_table_size(k, b)
+        assert F == 1 << 31
+        w = jax.ShapeDtypeStruct((F, 3), jnp.float32)
+        bias = jax.ShapeDtypeStruct((3,), jnp.float32)
+        packed = jax.ShapeDtypeStruct((2, packed_width(k, b)), jnp.uint32)
+        out = jax.eval_shape(
+            lambda w, bias, p: bag_logits_packed(
+                LinearParams(w, bias), p, num_hashes=k, b=b),
+            w, bias, packed)
+        assert out.shape == (2, 3)
+
+    def test_over_boundary_raises(self):
+        from repro.core.linear_model import check_bag_table_size
+        with pytest.raises(ValueError, match="2\\^31"):
+            check_bag_table_size((1 << 23) + 1, 8)
+        with pytest.raises(ValueError, match="2\\^31"):
+            check_bag_table_size(1 << 26, 8)
+
+
 # -- the real registry, end to end -------------------------------------
 
 
@@ -344,6 +562,14 @@ class TestSuiteGreen:
             assert report.matrix[site.name]["donation"] == "pass"
         for site in registry.collective_sites():
             assert report.matrix[site.name]["collectives"] == "pass"
+        for site in registry.numerics_sites():
+            row = report.matrix[site.name]
+            numerics = [c for c in ("dtype_flow", "int_range",
+                                    "determinism")
+                        if row.get(c, "n/a") != "n/a"]
+            assert numerics, f"{site.name} ran no numerics checks"
+            for c in numerics:
+                assert row[c] == "pass", (site.name, c)
 
     def test_launch_extraction_structure(self):
         # structural sanity on a real kernel: grid, operands, scratch

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import compile_guard
 from repro.kernels.flash_attention import (flash_attention_fwd,
                                            flash_attention_step,
                                            ring_flash_attention,
@@ -63,6 +64,35 @@ class TestStepKernel:
             out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
             np.testing.assert_allclose(np.asarray(out), np.asarray(full),
                                        rtol=2e-4, atol=2e-4)
+
+    def test_ring_walk_single_step_compile(self):
+        """The whole ring walk reuses ONE flash_attention_step compile
+        (analysis.compile_guard, replacing the old ad-hoc
+        ``_cache_size() == 1`` asserts): every step folds an identical
+        (blk)-shaped K/V shard into the same fp32 carry structure.  The
+        first carry is built explicitly — a ``carry=None`` first step
+        would trace a second pytree structure and double the ring's
+        compile cost.  Dims are unique to this test so the module-jitted
+        step's warm cache from other tests cannot mask a retrace."""
+        key = jax.random.PRNGKey(9)
+        b, s, h, g, d, blk = 1, 96, 2, 2, 8, 32
+        q, k, v = make_qkv(key, b, s, s, h, g, d)
+        full = flash_attention_fwd(q, k, v, window=0, blk_q=blk,
+                                   blk_k=blk, interpret=True)
+        carry = (jnp.full((b, s, h, 1), -1e30, jnp.float32),
+                 jnp.zeros((b, s, h, 1), jnp.float32),
+                 jnp.zeros((b, s, h, d), jnp.float32))
+        with compile_guard() as g:
+            g.watch(flash_attention_step, label="flash_attention_step")
+            for lo in range(0, s, blk):
+                carry = flash_attention_step(
+                    q, k[:, lo:lo + blk], v[:, lo:lo + blk], carry,
+                    q_base=0, k_base=jnp.int32(lo), window=0,
+                    blk_q=blk, blk_k=blk, interpret=True)
+        m, l, acc = carry
+        out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(full),
+                                   rtol=2e-4, atol=2e-4)
 
     def test_pad_rows_never_alias_next_shard(self):
         """A k shard whose length does not divide blk_k pads internally;

@@ -1,18 +1,23 @@
 """Kernel-contract lint CLI (repro.analysis front end).
 
-Runs the five-check static-analysis suite over the registry and emits a
+Runs the eight-check static-analysis suite over the registry and emits a
 human-readable matrix, optionally a machine-readable JSON report:
 
     python -m tools.kernel_lint --all --strict
     python -m tools.kernel_lint --families cws,cws_packed
+    python -m tools.kernel_lint --check numerics
     python -m tools.kernel_lint --all --json benchmarks/results/BENCH_kernel_lint.json
 
 ``--strict`` exits 1 on any error-severity finding (the CI gate: a new
 op family missing impls, a VMEM model off by >10%, an index map out of
-bounds, a donation alias, an unbound collective axis).  ``--exhaustive``
-audits every block_candidates entry instead of table + heuristic +
-corner candidates.  The device count is whatever the host exposes — CI
-runs both 1-dev and XLA_FLAGS=--xla_force_host_platform_device_count=8.
+bounds, a donation alias, an unbound collective axis, an implicit
+downcast, a provable integer wrap/out-of-range shift, or a determinism
+hazard).  ``--check``/``--checks`` takes a comma-separated subset; the
+token ``numerics`` expands to dtype_flow,int_range,determinism.
+``--exhaustive`` audits every block_candidates entry instead of table +
+heuristic + corner candidates.  The device count is whatever the host
+exposes — CI runs both 1-dev and
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -29,8 +34,10 @@ def main(argv=None) -> int:
                          "when --families is not given)")
     ap.add_argument("--families", default="",
                     help="comma-separated model families to audit")
-    ap.add_argument("--checks", default="",
-                    help="comma-separated subset of checks to run")
+    ap.add_argument("--checks", "--check", default="",
+                    help="comma-separated subset of checks to run; "
+                         "'numerics' expands to "
+                         "dtype_flow,int_range,determinism")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any error-severity finding")
     ap.add_argument("--exhaustive", action="store_true",
@@ -40,10 +47,13 @@ def main(argv=None) -> int:
                     help="write the machine-readable report to PATH")
     args = ap.parse_args(argv)
 
-    from repro.analysis import CHECKS, run_suite
+    from repro.analysis import CHECKS, NUMERICS_CHECKS, run_suite
 
     families = [f for f in args.families.split(",") if f] or None
-    checks = tuple(c for c in args.checks.split(",") if c) or CHECKS
+    checks = []
+    for tok in (c for c in args.checks.split(",") if c):
+        checks.extend(NUMERICS_CHECKS if tok == "numerics" else (tok,))
+    checks = tuple(dict.fromkeys(checks)) or CHECKS
     report = run_suite(families, checks=checks,
                        exhaustive=args.exhaustive)
 
