@@ -1,0 +1,142 @@
+"""Online serving benchmark: latency / QPS / compile discipline per mode.
+
+Boots a ``repro.serving.ServingService`` for each served pipeline mode
+(stored-param, ``create_regen``, ``packed=True``), fires a fixed stream
+of synthetic ragged requests through the gateway, and reads the numbers
+straight off the monitoring surface — the same ``snapshot()`` schema the
+``/stats`` endpoint serves, so the bench doubles as a consumer test of
+the stats JSON:
+
+  * warmup_ms           one-time cost of compiling every bucket executable
+  * p50_ms / p99_ms     request latency percentiles (submit -> logits)
+  * qps                 sustained requests/s over the whole run
+  * rows_per_s          sustained scored rows/s
+  * compile_count       MUST equal len(buckets): the compile-discipline
+                        gate, asserted AFTER the JSON persists
+  * buckets             per-bucket batches / real rows / pad rows
+
+Emits BENCH_serve.json.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core.linear_model import LinearParams
+from repro.pipeline import FeaturePipeline, FeatureSpec
+from repro.serving import ServingService
+
+DIM = 64
+N_CLASSES = 10
+K = 32
+BUCKETS = (8, 32, 128)
+
+MODES = ("stored", "regen", "packed")
+
+
+def make_service(mode: str) -> ServingService:
+    spec = FeatureSpec(num_hashes=K, b_i=4, packed=(mode == "packed"))
+    if mode == "stored":
+        pipe = FeaturePipeline.create(jax.random.PRNGKey(0), DIM, spec)
+    else:
+        pipe = FeaturePipeline.create_regen(jax.random.PRNGKey(0), DIM, spec)
+    rng = np.random.default_rng(1)
+    params = LinearParams(
+        jnp.asarray(rng.standard_normal((pipe.num_features, N_CLASSES)),
+                    jnp.float32),
+        jnp.zeros((N_CLASSES,), jnp.float32))
+    return ServingService(params, pipe, buckets=BUCKETS)
+
+
+def run_mode(mode: str, n_requests: int, max_rows: int) -> dict:
+    svc = make_service(mode)
+    try:
+        rng = np.random.default_rng(7)
+        sizes = rng.integers(1, max_rows + 1, n_requests)
+        reqs = []
+        for m in sizes:
+            x = np.abs(rng.standard_normal((int(m), DIM))).astype(np.float32)
+            reqs.append(x * (rng.random((int(m), DIM)) < 0.3))
+
+        # closed-loop client: at most WINDOW requests outstanding, so the
+        # bench respects the gateway's backpressure bound instead of
+        # measuring QueueFull rejections
+        WINDOW = 64
+        t0 = time.perf_counter()
+        futures = []
+        for i, x in enumerate(reqs):
+            if i >= WINDOW:
+                futures[i - WINDOW].result(timeout=120.0)
+            futures.append(svc.submit(x))
+        for f in futures[max(0, len(futures) - WINDOW):]:
+            f.result(timeout=120.0)
+        wall = time.perf_counter() - t0
+
+        s = svc.stats()
+        lat = s["latency_ms"]
+        out = {
+            "requests": n_requests,
+            "rows": int(s["rows"]),
+            "warmup_ms": svc.warmup_s * 1e3,
+            "p50_ms": lat["p50"],
+            "p99_ms": lat["p99"],
+            "max_ms": lat["max"],
+            "qps": n_requests / wall,
+            "rows_per_s": s["rows"] / wall,
+            "compile_count": int(s["compile_count"]),
+            "pad_rows": int(s.get("pad_rows", 0)),
+            "buckets": s["buckets"],
+        }
+        emit(f"serve_{mode}_p50", lat["p50"] * 1e3,
+             f"{out['qps']:.0f} req/s")
+        return out
+    finally:
+        svc.stop()
+
+
+def run(fast: bool = False) -> dict:
+    n_requests = 60 if fast else 400
+    max_rows = 96           # ragged sizes spanning every bucket in (8, 32, 128)
+    result = {
+        "buckets": list(BUCKETS),
+        "dim": DIM,
+        "num_hashes": K,
+        "n_classes": N_CLASSES,
+        "requests_per_mode": n_requests,
+        "max_rows": max_rows,
+        "modes": {},
+    }
+    for mode in MODES:
+        result["modes"][mode] = run_mode(mode, n_requests, max_rows)
+
+    save_json("BENCH_serve", result)
+
+    # gates AFTER persisting: the numbers are on disk either way
+    for mode, r in result["modes"].items():
+        assert r["compile_count"] == len(BUCKETS), (
+            f"{mode}: {r['compile_count']} executables for "
+            f"{len(BUCKETS)} buckets — a retrace escaped the padding "
+            f"discipline")
+        served = sum(b["rows"] for b in r["buckets"].values())
+        assert served == r["rows"], (
+            f"{mode}: dispatched {served} rows but clients submitted "
+            f"{r['rows']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

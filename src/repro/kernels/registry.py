@@ -39,6 +39,8 @@ __all__ = [
     "choose_blocks",
     "update_block_table", "save_block_table", "load_block_table",
     "block_candidates", "vmem_bytes", "table_key", "BLOCK_TABLE",
+    "serve_buckets", "update_serve_buckets", "save_serve_buckets",
+    "load_serve_buckets", "SERVE_BUCKET_TABLE", "DEFAULT_SERVE_BUCKETS",
     # introspection surface consumed by repro.analysis / tools/kernel_lint
     "registered_ops", "family", "model_families", "vmem_budget",
     "has_vmem_model", "LaunchProbe", "register_probe", "family_probes",
@@ -306,6 +308,63 @@ def choose_blocks(n: int, d: int, k: int, *,
     while model(b1, b2, bd) > _VMEM_BUDGET and b2 > 8:
         b2 //= 2
     return b1, b2, bd
+
+
+# ---------------------------------------------------------------------------
+# serving shape buckets
+# ---------------------------------------------------------------------------
+
+# Padded request-batch shapes the online serving runner pre-compiles, per
+# kernel family (the block table's sibling: blocks tile ONE launch, buckets
+# enumerate WHICH launch shapes exist).  Every incoming micro-batch is
+# padded up to the smallest bucket that holds it, so mixed traffic over B
+# buckets compiles exactly B fused featurize+score executables — the
+# serving-side twin of the streaming single-compile invariant (DESIGN.md
+# §9).  Measured sweeps (latency-vs-pad-waste on real hardware) refine the
+# default ladder per family via update_serve_buckets / load_serve_buckets,
+# exactly like the autotuned block table.
+DEFAULT_SERVE_BUCKETS: Tuple[int, ...] = (1, 8, 32, 128, 512)
+
+SERVE_BUCKET_TABLE: Dict[str, Tuple[int, ...]] = {}
+
+
+def _check_buckets(buckets) -> Tuple[int, ...]:
+    out = tuple(int(b) for b in buckets)
+    if not out or any(b <= 0 for b in out) or list(out) != sorted(set(out)):
+        raise ValueError(
+            f"serve buckets must be a strictly increasing tuple of "
+            f"positive row counts; got {buckets!r}")
+    return out
+
+
+def serve_buckets(op: str = "cws") -> Tuple[int, ...]:
+    """The padded-batch ladder the serving runner compiles for ``op``'s
+    family: the persisted per-family entry if a sweep installed one, else
+    the default ladder."""
+    return SERVE_BUCKET_TABLE.get(_family(op), DEFAULT_SERVE_BUCKETS)
+
+
+def update_serve_buckets(entries: Dict[str, Tuple[int, ...]]) -> None:
+    SERVE_BUCKET_TABLE.update(
+        {_family(op): _check_buckets(v) for op, v in entries.items()})
+
+
+def save_serve_buckets(path, entries: Dict | None = None) -> None:
+    """Persist the bucket table as JSON ("family" -> [rows...]), next to
+    the block table format; round-trips through load_serve_buckets so a
+    measured ladder can be checked in and replayed on any host."""
+    entries = SERVE_BUCKET_TABLE if entries is None else entries
+    obj = {op: list(v) for op, v in sorted(entries.items())}
+    pathlib.Path(path).write_text(json.dumps(obj, indent=1))
+
+
+def load_serve_buckets(path) -> Dict[str, Tuple[int, ...]]:
+    """Load a save_serve_buckets JSON file into SERVE_BUCKET_TABLE;
+    returns the parsed entries."""
+    obj = json.loads(pathlib.Path(path).read_text())
+    entries = {op: tuple(int(x) for x in v) for op, v in obj.items()}
+    update_serve_buckets(entries)
+    return entries
 
 
 # ---------------------------------------------------------------------------

@@ -138,6 +138,7 @@ class FeaturePipeline:
         self.blocks = blocks
         self.row_chunk = row_chunk
         self._donating_chunk_fn = None
+        self._scoring_fn = None        # fused featurize+score, non-donating
         self._sharded_fns = {}         # (mesh, donate) -> jitted shard_map
         self._sliced_state = None      # cache: k-prefix slice of params
         self._sliced_from = None
@@ -400,6 +401,33 @@ class FeaturePipeline:
                 lambda xc, state: self._launch_with(xc, state),
                 donate_argnums=registry.donate_argnums(0))
         return self._donating_chunk_fn
+
+    def scoring_chunk_fn(self):
+        """The ONLINE-SERVING launch: one cached jitted executable fusing
+        the featurization kernel with the embedding-bag logits head
+        matched to the spec's output format (``bag_logits``, or
+        ``bag_logits_packed`` for ``packed`` specs) —
+        ``fn(xc, pipe._state(), table) -> (m, C) float32`` logits.
+
+        NON-donating, unlike ``_chunk_fn``: the serving gateway re-pads
+        caller request rows into buffers it still owns when slicing
+        responses back out, and the (F, C) weight table must stay live
+        across every request.  Each distinct m compiles one executable
+        (inspect via ``_cache_size()``), which is exactly the per-bucket
+        discipline repro.serving.BucketRunner keys its warmup off."""
+        self._require_bucketed("scoring_chunk_fn")
+        if self._scoring_fn is None:
+            from repro.core.linear_model import bag_logits, bag_logits_packed
+            if self.spec.packed:
+                head = functools.partial(bag_logits_packed,
+                                         num_hashes=self.spec.num_hashes,
+                                         b=self.spec.bits)
+            else:
+                head = bag_logits
+            self._scoring_fn = jax.jit(
+                lambda xc, state, table: head(
+                    table, self._launch_with(xc, state)))
+        return self._scoring_fn
 
     def _launch_with(self, x: Array, state) -> Array:
         """One kernel launch on explicit state (CWSParams or key words)."""

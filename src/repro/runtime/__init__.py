@@ -4,6 +4,7 @@ from repro.runtime.fault_tolerance import (
 from repro.runtime.chaos import (
     ChaosKill, ChaosPlan, Fault, FaultInjected, fail_async_write, hang_at,
     kill_at, kill_between_snapshot_and_commit, kill_eval_at, raise_at,
+    serve_hang_at, serve_kill_at, serve_raise_at,
 )
 
 __all__ = [
@@ -11,4 +12,5 @@ __all__ = [
     "ChaosKill", "ChaosPlan", "Fault", "FaultInjected",
     "fail_async_write", "hang_at", "kill_at",
     "kill_between_snapshot_and_commit", "kill_eval_at", "raise_at",
+    "serve_hang_at", "serve_kill_at", "serve_raise_at",
 ]

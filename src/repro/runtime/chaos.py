@@ -16,6 +16,10 @@ Injection sites (where the production code calls ``plan.fire(site, i)``):
     "ckpt_io"          Checkpointer write, before any file IO
     "ckpt_pre_rename"  write dir fully written, BEFORE tmp -> step rename
     "ckpt_pre_commit"  renamed, BEFORE the COMMIT marker is written
+    "serve_step"       serving.BucketRunner.run, before dispatch i
+                       (the online-serving chaos surface: a hang here
+                       models a stuck accelerator under a live gateway,
+                       a kill models replica death mid-request)
 
 Fault actions:
 
@@ -91,6 +95,25 @@ def kill_eval_at(chunk: int) -> Fault:
 def fail_async_write(step: int) -> Fault:
     """The async checkpoint write for ``step`` raises OSError."""
     return Fault("ckpt_io", step, "io_error")
+
+
+def serve_raise_at(dispatch: int) -> Fault:
+    """Software fault in serving dispatch ``dispatch`` (the gateway must
+    fail only the in-flight requests and keep serving)."""
+    return Fault("serve_step", dispatch, "raise")
+
+
+def serve_kill_at(dispatch: int) -> Fault:
+    """Runner death before serving dispatch ``dispatch`` (in-flight
+    requests fail with RunnerCrashed; the service recovers)."""
+    return Fault("serve_step", dispatch, "kill")
+
+
+def serve_hang_at(dispatch: int, seconds: float) -> Fault:
+    """Serving dispatch ``dispatch`` hangs for ``seconds`` — what the
+    gateway's watchdog must catch mid-flight, failing the in-flight
+    requests with a clean ServeTimeout instead of letting clients hang."""
+    return Fault("serve_step", dispatch, "hang", seconds=seconds)
 
 
 def kill_between_snapshot_and_commit(step: int,

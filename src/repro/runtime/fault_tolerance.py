@@ -160,6 +160,16 @@ class StepWatchdog:
                 f"{self.fired['elapsed_s']:.2f}s "
                 f"(hard_timeout_s={self.hard_timeout_s})") from exc
 
+    def clear_step(self):
+        """Abandon the in-flight step WITHOUT judging it: the caller has
+        already handled its failure (e.g. a serving dispatch that died
+        and failed its requests), so the hard-timeout monitor must stop
+        watching a step whose owner is gone.  The statistical history is
+        untouched — an abandoned step is neither a straggler nor a
+        sample."""
+        with self._lock:
+            self._t0 = None
+
     # -- per-step accounting -------------------------------------------
 
     def start_step(self, index: Optional[int] = None):

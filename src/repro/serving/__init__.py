@@ -1,0 +1,31 @@
+"""Online serving for the featurize→score path (DESIGN.md §16).
+
+Layered like the production inference stacks the ROADMAP points at:
+
+  * ``BucketRunner``  — persistent pre-compiled fused featurize+score
+    executables, one per padded shape bucket (registry serve buckets),
+    warmed at startup, chaos-hookable;
+  * ``Gateway``       — request micro-batching: queue, coalesce, pad to
+    the smallest bucket, dispatch, slice responses back out; bounded
+    queue (backpressure), per-request deadlines, watchdog-backed
+    in-flight timeouts;
+  * ``ServeMonitor``  — per-bucket counters, p50/p99 latency, queue
+    depth, compile count, exposed as a JSON ``/stats`` endpoint;
+  * bundles           — ``save_bundle``/``load_bundle``: the on-disk
+    served model (weights + spec fingerprint + CWS key words/matrices);
+  * ``ServingService``— all of the above assembled.
+"""
+from repro.serving.bundle import load_bundle, save_bundle
+from repro.serving.gateway import (DeadlineExceeded, Gateway, QueueFull,
+                                   RunnerCrashed, ServeError, ServeFuture,
+                                   ServeTimeout)
+from repro.serving.monitor import ServeMonitor, StatsServer, start_stats_server
+from repro.serving.runner import BucketRunner
+from repro.serving.service import ServingService
+
+__all__ = [
+    "BucketRunner", "Gateway", "ServeMonitor", "ServingService",
+    "StatsServer", "start_stats_server", "save_bundle", "load_bundle",
+    "ServeFuture", "ServeError", "ServeTimeout", "DeadlineExceeded",
+    "QueueFull", "RunnerCrashed",
+]

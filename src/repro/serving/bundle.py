@@ -1,0 +1,113 @@
+"""Served-model bundles: everything an inference replica needs, on disk.
+
+The paper's production pitch (and PR 6's b-bit follow-up) is that the
+featurize→score path collapses to "well matured linear algorithms": the
+entire served model is the linear (F, C) table plus the CWS state — and
+in ``create_regen`` mode that state is TWO uint32 key words, so a bundle
+is essentially just the weights.  A bundle directory holds:
+
+    bundle.json   format tag, mode, FeatureSpec fields, dim, n_classes,
+                  and the pipeline FINGERPRINT (spec + dim + a content
+                  digest of the CWS state)
+    arrays.npz    w (F, C), b (C,), and the CWS state: key_words (2,)
+                  uint32 in regen mode, else r/log_c/beta (D, k) fp32
+
+``load_bundle`` reconstructs the pipeline from the manifest, then
+verifies the reconstruction's ``fingerprint()`` against the stored one —
+a bundle whose arrays and manifest drifted apart (partial copy, manual
+edit) fails loudly instead of serving garbage scores.  The writer goes
+through a tmp-dir + atomic rename so a killed export never leaves a
+half-written bundle that loads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cws import CWSParams
+from repro.core.linear_model import LinearParams, validate_bag_features
+from repro.pipeline import FeaturePipeline, FeatureSpec
+
+FORMAT = "repro-served-model/v1"
+
+__all__ = ["save_bundle", "load_bundle", "FORMAT"]
+
+
+def save_bundle(path, params: LinearParams, pipe: FeaturePipeline) -> None:
+    """Write a served-model bundle directory (atomically) for
+    ``(params, pipe)``.  ``params`` must be the flat bag table matching
+    the pipeline's feature space — validated here, not at load time on
+    some replica at 3am."""
+    validate_bag_features(params, pipe.num_features, spec=pipe.spec)
+    path = pathlib.Path(path)
+    manifest = {
+        "format": FORMAT,
+        "mode": "regen" if pipe.param_free else "stored",
+        "spec": dataclasses.asdict(pipe.spec),
+        "dim": int(pipe.dim),
+        "n_classes": int(params.b.shape[0]),
+        "row_chunk": int(pipe.row_chunk),
+        "fingerprint": pipe.fingerprint(),
+    }
+    arrays = {"w": np.asarray(params.w), "b": np.asarray(params.b)}
+    if pipe.param_free:
+        arrays["key_words"] = np.asarray(pipe._key_words, np.uint32)
+    else:
+        s = pipe._state()
+        arrays.update(r=np.asarray(s.r), log_c=np.asarray(s.log_c),
+                      beta=np.asarray(s.beta))
+    tmp = path.with_name(path.name + ".tmp")
+    if tmp.exists():
+        import shutil
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "bundle.json").write_text(json.dumps(manifest, indent=1))
+    if path.exists():
+        import shutil
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def load_bundle(path, **pipe_kw) -> Tuple[LinearParams, FeaturePipeline]:
+    """Bundle dir -> ``(params, pipe)``, fingerprint-verified.
+
+    ``pipe_kw`` forwards pipeline knobs (``impl=``, ``blocks=``) to the
+    reconstruction — serving hosts may pin a different kernel impl than
+    the trainer did; the fingerprint covers the feature SPACE, not the
+    launch configuration."""
+    path = pathlib.Path(path)
+    manifest = json.loads((path / "bundle.json").read_text())
+    if manifest.get("format") != FORMAT:
+        raise ValueError(
+            f"{path} is not a served-model bundle (format="
+            f"{manifest.get('format')!r}; expected {FORMAT!r})")
+    with np.load(path / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    spec = FeatureSpec(**manifest["spec"])
+    pipe_kw.setdefault("row_chunk", manifest.get("row_chunk", 8192))
+    if manifest["mode"] == "regen":
+        pipe = FeaturePipeline.create_regen(
+            jnp.asarray(arrays["key_words"]), manifest["dim"], spec,
+            **pipe_kw)
+    else:
+        state = CWSParams(jnp.asarray(arrays["r"]),
+                          jnp.asarray(arrays["log_c"]),
+                          jnp.asarray(arrays["beta"]))
+        pipe = FeaturePipeline(state, spec, **pipe_kw)
+    fp = pipe.fingerprint()
+    if fp != manifest["fingerprint"]:
+        raise ValueError(
+            f"bundle {path} fingerprint mismatch: manifest says "
+            f"{manifest['fingerprint']} but the reconstructed pipeline "
+            f"fingerprints as {fp} — arrays and manifest have drifted")
+    params = LinearParams(jnp.asarray(arrays["w"]), jnp.asarray(arrays["b"]))
+    validate_bag_features(params, pipe.num_features, spec=pipe.spec)
+    return params, pipe

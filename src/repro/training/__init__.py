@@ -6,7 +6,7 @@ from repro.training.trainer import (
 from repro.training.linear_trainer import (
     fit_linear_streamed, resume_linear_streamed,
     fit_linear_streamed_resilient, streamed_accuracy,
-    resume_streamed_accuracy,
+    resume_streamed_accuracy, export_served_model,
 )
 
 __all__ = [
@@ -15,5 +15,5 @@ __all__ = [
     "TrainHparams", "microbatch_grads",
     "fit_linear_streamed", "resume_linear_streamed",
     "fit_linear_streamed_resilient", "streamed_accuracy",
-    "resume_streamed_accuracy",
+    "resume_streamed_accuracy", "export_served_model",
 ]

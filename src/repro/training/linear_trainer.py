@@ -81,7 +81,7 @@ Array = jax.Array
 
 __all__ = ["fit_linear_streamed", "resume_linear_streamed",
            "fit_linear_streamed_resilient", "streamed_accuracy",
-           "resume_streamed_accuracy"]
+           "resume_streamed_accuracy", "export_served_model"]
 
 
 def _bag_logits_fn(pipe: FeaturePipeline):
@@ -590,6 +590,19 @@ def fit_linear_streamed_resilient(params: LinearParams,
                 wd.stop()
 
     return trainer.call(attempt)
+
+
+def export_served_model(params: LinearParams, pipe: FeaturePipeline,
+                        path) -> None:
+    """Hand a trained ``(params, pipe)`` pair to the serving stack: write
+    a ``repro.serving`` bundle directory — the linear (F, C) table + the
+    spec fingerprint + the CWS key words (regen mode) or matrices — that
+    ``ServingService.from_bundle``/``launch/serve.py --bundle`` boots a
+    replica from.  The trainer owns this hop so the fingerprint stamped
+    into the bundle is the SAME one its checkpoints carry: train, resume,
+    and serve all pin one feature space."""
+    from repro.serving.bundle import save_bundle
+    save_bundle(path, params, pipe)
 
 
 def streamed_accuracy(params: LinearParams, pipe: FeaturePipeline,
