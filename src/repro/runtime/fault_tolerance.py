@@ -73,14 +73,23 @@ class StepWatchdog:
     interrupts the main thread with SIGINT; the driver catches the
     resulting KeyboardInterrupt and re-raises it as ``TrainingAborted``
     via ``reraise_if_fired()``.
+
+    ``statistical=False`` disables the straggler tier entirely (no
+    trailing-median comparison, no ``max_strays`` abort); only the hard
+    monitor can abort.  That is the right mode whenever step wall time
+    is legitimately multi-modal — the serving gateway dispatches to
+    different shape buckets, so a big-bucket step after a run of
+    small-bucket steps is NOT a straggler.
     """
 
     def __init__(self, *, timeout_factor: float = 5.0,
                  min_history: int = 5, max_strays: int = 3,
                  hard_timeout_s: float = 0.0,
                  poll_s: Optional[float] = None,
+                 statistical: bool = True,
                  on_straggler: Optional[Callable[[float, float], None]] = None,
                  on_timeout: Optional[Callable[[float], None]] = None):
+        self.statistical = statistical
         self.timeout_factor = timeout_factor
         self.min_history = min_history
         self.max_strays = max_strays
@@ -187,7 +196,8 @@ class StepWatchdog:
             self._t0 = None
             hard_fired = self._fired_step == self.step_index
         median = (statistics.median(self.history)
-                  if len(self.history) >= self.min_history else None)
+                  if self.statistical and
+                  len(self.history) >= self.min_history else None)
         is_stray = False
         if median is not None and dt > self.timeout_factor * median:
             is_stray = True
@@ -207,7 +217,7 @@ class StepWatchdog:
                                 "median_s": median})
             if self.on_straggler:
                 self.on_straggler(dt, median or 0.0)
-            if self.stray_count >= self.max_strays:
+            if self.statistical and self.stray_count >= self.max_strays:
                 raise TrainingAborted(
                     f"{self.stray_count} consecutive straggler steps "
                     f"(last {dt:.2f}s vs median {median:.2f}s)")

@@ -17,7 +17,10 @@ verifies the reconstruction's ``fingerprint()`` against the stored one —
 a bundle whose arrays and manifest drifted apart (partial copy, manual
 edit) fails loudly instead of serving garbage scores.  The writer goes
 through a tmp-dir + atomic rename so a killed export never leaves a
-half-written bundle that loads.
+half-written bundle that loads; overwriting an existing bundle first
+renames it aside to ``<path>.old`` (directories cannot be
+rename-replaced), so a crashed re-export leaves a complete previous
+bundle recoverable rather than nothing.
 """
 from __future__ import annotations
 
@@ -25,6 +28,7 @@ import dataclasses
 import json
 import os
 import pathlib
+import shutil
 from typing import Tuple
 
 import jax
@@ -65,15 +69,25 @@ def save_bundle(path, params: LinearParams, pipe: FeaturePipeline) -> None:
                       beta=np.asarray(s.beta))
     tmp = path.with_name(path.name + ".tmp")
     if tmp.exists():
-        import shutil
         shutil.rmtree(tmp)
     tmp.mkdir(parents=True)
     np.savez(tmp / "arrays.npz", **arrays)
     (tmp / "bundle.json").write_text(json.dumps(manifest, indent=1))
     if path.exists():
-        import shutil
-        shutil.rmtree(path)
-    os.replace(tmp, path)
+        # a non-empty directory cannot be rename-replaced, so overwrite
+        # moves the old bundle ASIDE (one rename) and installs the new
+        # one (a second rename) — every instant has a complete bundle on
+        # disk at either ``path`` or ``path.old``, never a half-deleted
+        # tree; a crash between the renames leaves ``path.old`` intact
+        # for recovery
+        old = path.with_name(path.name + ".old")
+        if old.exists():
+            shutil.rmtree(old)
+        os.replace(path, old)
+        os.replace(tmp, path)
+        shutil.rmtree(old)
+    else:
+        os.replace(tmp, path)
 
 
 def load_bundle(path, **pipe_kw) -> Tuple[LinearParams, FeaturePipeline]:

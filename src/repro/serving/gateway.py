@@ -5,8 +5,11 @@ the accelerator wants a handful of fixed shapes.  The gateway bridges
 them the way every production inference front end does:
 
   * QUEUE    — submitted rows enqueue FIFO; ``max_queue_rows`` is the
-    backpressure bound (beyond it ``submit`` raises ``QueueFull`` — the
-    caller sheds load instead of the queue growing without bound).
+    backpressure bound (a request that would push the BACKLOG past it
+    raises ``QueueFull`` — the caller sheds load instead of the queue
+    growing without bound).  The bound caps backlog, not request size:
+    an idle queue admits a request of any size, which then streams
+    through segment by segment.
   * COALESCE — the dispatch thread drains consecutive requests into one
     micro-batch while they fit the largest bucket, pads the batch up to
     the SMALLEST bucket that holds it, dispatches one pre-compiled
@@ -167,10 +170,16 @@ class Gateway:
         self._batches = 0
         self._watchdog = None
         if hard_timeout_s > 0:
+            # statistical=False: dispatch wall time varies by bucket, so
+            # the trailing-median straggler tier would abort legitimate
+            # big-bucket steps after small-bucket traffic; only the hard
+            # monitor (which fails in-flight requests itself) may fire.
             self._watchdog = StepWatchdog(hard_timeout_s=hard_timeout_s,
+                                          statistical=False,
                                           on_timeout=self._on_hard_timeout)
         if monitor is not None:
             monitor.gauge("queue_rows", lambda: self._queued_rows)
+            monitor.gauge("queue_requests", self._queued_requests)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="serve-gateway")
         self._thread.start()
@@ -179,9 +188,10 @@ class Gateway:
 
     def submit(self, x, *, deadline_s: Optional[float] = None) -> ServeFuture:
         """Enqueue (m, D) nonneg rows; returns a ``ServeFuture`` for the
-        (m, C) logits.  Raises ``QueueFull`` immediately when the queue
-        is at ``max_queue_rows`` (backpressure is the caller's signal,
-        not a silent stall)."""
+        (m, C) logits.  Raises ``QueueFull`` immediately when admitting
+        would push a NON-empty queue past ``max_queue_rows``
+        (backpressure is the caller's signal, not a silent stall; an
+        idle queue admits any size)."""
         x = np.asarray(x, np.float32)
         if x.ndim != 2 or x.shape[1] != self.runner.pipe.dim:
             raise ValueError(
@@ -209,7 +219,13 @@ class Gateway:
         with self._cv:
             if self._stop:
                 raise ServeError("gateway is stopped")
-            if self._queued_rows + x.shape[0] > self.max_queue_rows:
+            # backpressure: reject a request that would push the queue
+            # past the bound — UNLESS the queue is empty, so a single
+            # request larger than max_queue_rows still streams through
+            # an idle service segment by segment (any size is servable;
+            # the bound caps BACKLOG, not request size)
+            if (self._queue and
+                    self._queued_rows + x.shape[0] > self.max_queue_rows):
                 if self.monitor is not None:
                     self.monitor.count("rejected")
                 raise QueueFull(
@@ -228,19 +244,34 @@ class Gateway:
         return self.submit(x, deadline_s=deadline_s).result(timeout)
 
     def stop(self) -> None:
+        """Stop dispatching: the in-flight batch (if any) finishes, but
+        nothing still queued is dispatched — it fails with ``gateway
+        stopped``.  With a watchdog armed the join is bounded: a runner
+        hung past the hard timeout already had its requests failed, and
+        the daemon dispatch thread must not hang ``stop()`` with it."""
         with self._cv:
             self._stop = True
             self._cv.notify_all()
-        self._thread.join()
+        timeout = None
+        if self._watchdog is not None:
+            timeout = max(2.0 * self._watchdog.hard_timeout_s, 1.0)
+        self._thread.join(timeout)
         if self._watchdog is not None:
             self._watchdog.stop()
         with self._cv:
-            for it in self._queue:
-                it.req.fail(ServeError("gateway stopped"))
+            items = list(self._queue) + self._inflight
             self._queue.clear()
+            self._inflight = []
             self._queued_rows = 0
+        for it in items:
+            it.req.fail(ServeError("gateway stopped"))
 
     # -- dispatch loop -------------------------------------------------
+
+    def _queued_requests(self) -> int:
+        """Distinct requests with at least one segment still queued."""
+        with self._cv:
+            return len({id(it.req) for it in self._queue})
 
     def _on_hard_timeout(self, elapsed: float) -> None:
         """Watchdog monitor thread: the in-flight dispatch hung.  Fail
@@ -279,14 +310,16 @@ class Gateway:
 
     def _take_batch(self):
         """Block until work or stop; returns (items, rows) with rows <=
-        the top bucket (FIFO coalescing across requests)."""
+        the top bucket (FIFO coalescing across requests).  A stop wins
+        immediately — still-queued items are NOT drained; ``stop()``
+        fails them with a clean error after the join."""
         with self._cv:
             while True:
+                if self._stop:
+                    return None, 0
                 self._sweep_expired_locked()
                 if self._queue:
                     break
-                if self._stop:
-                    return None, 0
                 self._cv.wait(timeout=0.05)
             items, rows = [], 0
             cap = self.runner.max_bucket
@@ -298,11 +331,11 @@ class Gateway:
             return items, rows
 
     def _loop(self) -> None:
-        wd = self._watchdog
         while True:
             items, rows = self._take_batch()
             if items is None:
                 return
+            wd = self._watchdog
             bucket = self.runner.bucket_for(rows)
             xb = np.zeros((bucket, self.runner.pipe.dim), np.float32)
             off = 0
@@ -320,10 +353,21 @@ class Gateway:
                 out = self.runner.run(jnp.asarray(xb))
                 if wd is not None:
                     wd.end_step()
-            except TrainingAborted:
-                # the hung dispatch finally limped home; its requests
-                # were already failed mid-hang by _on_hard_timeout
-                self._fail_inflight(None, "hang_recovered")
+            except TrainingAborted as e:
+                with self._cv:
+                    poisoned = self._poisoned
+                if poisoned:
+                    # the hung dispatch finally limped home; its requests
+                    # were already failed mid-hang by _on_hard_timeout
+                    self._fail_inflight(None, "hang_recovered")
+                else:
+                    # the watchdog aborted WITHOUT the monitor callback
+                    # having failed the futures (it shouldn't, with the
+                    # statistical tier off — but an abort must never
+                    # strand a synchronous caller waiting forever)
+                    self._fail_inflight(ServeTimeout(
+                        f"dispatch aborted by the watchdog: {e}"),
+                        "failed_batches")
             except ChaosKill as e:
                 # simulated runner death: fail in-flight cleanly and keep
                 # serving — the regen-mode restart story (model state is

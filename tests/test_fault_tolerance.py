@@ -223,3 +223,17 @@ class TestWatchdog:
         assert wd.stray_count == 1
         wd.start_step(); wd.end_step()
         assert wd.stray_count == 0
+
+    def test_statistical_tier_can_be_disabled(self):
+        # serving mode: multi-modal step times are legitimate, so the
+        # trailing-median comparison and the max_strays abort are off;
+        # only the hard monitor may abort
+        wd = StepWatchdog(timeout_factor=2.0, min_history=3, max_strays=1,
+                          statistical=False)
+        wd.history = [0.001] * 10
+        for _ in range(4):                        # would abort at stray 1
+            wd.start_step()
+            time.sleep(0.02)
+            wd.end_step()                         # must NOT raise
+        assert wd.stray_count == 0
+        assert not any(e["kind"] == "straggler" for e in wd.events)

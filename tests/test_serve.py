@@ -425,6 +425,69 @@ def test_repeated_faults_then_sustained_recovery():
         svc.stop()
 
 
+def test_mixed_bucket_speeds_never_trip_a_straggler_abort():
+    """The serving watchdog must run with the statistical straggler tier
+    OFF: dispatch wall time varies by bucket, so after fast small-bucket
+    traffic builds a tiny trailing median, slow (here: hang-delayed)
+    dispatches would read as 3 consecutive stragglers and abort — which
+    used to drop the in-flight futures on the floor, hanging synchronous
+    callers forever.  Every request must complete, bit-identically."""
+    params, pipe = make_problem("regen")
+    # 6 fast dispatches build the median; 3 slow ones exceed 5x it
+    plan = ChaosPlan(serve_hang_at(6, 0.25), serve_hang_at(7, 0.25),
+                     serve_hang_at(8, 0.25))
+    svc = ServingService(params, pipe, buckets=(8,), chaos=plan,
+                         hard_timeout_s=30.0)
+    try:
+        for i in range(9):
+            x = make_rows(3, seed=80 + i)
+            got = svc.score(x, timeout=10.0)
+            np.testing.assert_array_equal(got,
+                                          offline_scores(params, pipe, x))
+        assert svc.stats()["completed"] == 9
+    finally:
+        svc.stop()
+
+
+def test_spurious_watchdog_abort_fails_inflight_cleanly():
+    """Defense in depth for the same bug: even if end_step aborts a
+    dispatch the hard-timeout monitor never flagged (so _on_hard_timeout
+    never failed the futures), callers must get a clean error in bounded
+    time — never a silent hang — and the service must keep serving."""
+    from repro.runtime import TrainingAborted
+
+    params, pipe = make_problem("regen")
+    svc = ServingService(params, pipe, buckets=(8,), hard_timeout_s=30.0)
+
+    class AbortOnce:
+        hard_timeout_s = 30.0
+        calls = 0
+
+        def start_step(self, index=None):
+            pass
+
+        def end_step(self):
+            AbortOnce.calls += 1
+            if AbortOnce.calls == 1:
+                raise TrainingAborted("spurious abort, monitor never fired")
+
+        def clear_step(self):
+            pass
+
+        def stop(self):
+            pass
+
+    try:
+        svc.gateway._watchdog = AbortOnce()
+        x = make_rows(5)
+        with pytest.raises(ServeTimeout, match="aborted"):
+            svc.score(x, timeout=10.0)
+        np.testing.assert_array_equal(svc.score(x, timeout=10.0),
+                                      offline_scores(params, pipe, x))
+    finally:
+        svc.stop()
+
+
 def test_queue_backpressure_rejects_when_full():
     params, pipe = make_problem("regen")
     plan = ChaosPlan(serve_hang_at(0, 1.0))
@@ -444,6 +507,36 @@ def test_queue_backpressure_rejects_when_full():
         f2.result(timeout=10.0)
     finally:
         svc.stop()
+
+
+def test_request_larger_than_max_queue_rows_streams_through_idle_queue():
+    """max_queue_rows bounds BACKLOG, not request size: an idle service
+    admits a request bigger than the whole queue bound and streams it
+    through segment by segment (the docstring's 'any request size is
+    servable' claim, which a whole-request admission check broke)."""
+    params, pipe = make_problem("regen")
+    x = make_rows(20)
+    ref = offline_scores(params, pipe, x)
+    with ServingService(params, pipe, buckets=(8,),
+                        max_queue_rows=10) as svc:
+        np.testing.assert_array_equal(svc.score(x, timeout=30.0), ref)
+        assert svc.stats().get("rejected", 0) == 0
+
+
+def test_stop_fails_queued_requests_without_draining():
+    params, pipe = make_problem("regen")
+    plan = ChaosPlan(serve_hang_at(0, 0.5))
+    svc = ServingService(params, pipe, buckets=(8,), chaos=plan)
+    f1 = svc.submit(make_rows(4))               # dispatches, then hangs
+    deadline = time.monotonic() + 5.0
+    while svc.stats()["queue_rows"] > 0:        # wait until IN FLIGHT
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    f2 = svc.submit(make_rows(4))               # queued behind the hang
+    svc.stop()                                  # in-flight finishes, but
+    f1.result(timeout=10.0)                     # the QUEUED one is never
+    with pytest.raises(ServeError, match="gateway stopped"):
+        f2.result(timeout=10.0)                 # dispatched: clean fail
 
 
 def test_queued_request_deadline_expires_cleanly():
@@ -478,6 +571,8 @@ def test_stats_schema_and_percentiles():
         assert s["requests"] == 4 and s["completed"] == 4
         assert s["rows"] == 27
         assert s["compile_count"] == 2
+        # live backlog gauges: present (the documented schema) and empty
+        assert s["queue_rows"] == 0 and s["queue_requests"] == 0
         lat = s["latency_ms"]
         assert lat["count"] == 4
         assert 0 < lat["p50"] <= lat["p99"] <= lat["max"]
